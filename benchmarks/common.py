@@ -1,0 +1,24 @@
+"""Shared timing utilities for the benchmark suite."""
+
+import time
+
+import jax
+
+
+def time_fn(fn, *args, warmup=2, iters=5, **kw):
+    """Median wall time (seconds) of a jitted callable."""
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def row(name: str, seconds: float, derived: str = ""):
+    print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)

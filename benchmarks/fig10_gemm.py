@@ -1,0 +1,50 @@
+"""Paper Fig 10: n:m:g sparse-dense GEMM vs dense, on the paper's exact
+768 x 3072 x 4096 BERT_BASE feed-forward GEMM.
+
+Measured here: XLA-CPU wall time of the production gather-based path vs the
+dense matmul (the CPU analogue of the paper's measured speedups), plus the
+analytical TPU v5e roofline for the Pallas kernel (FLOP and HBM-byte counts
+of the compressed layout), since this container has no TPU.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_fn
+from repro.core import nmg
+from repro.kernels import ops as kops
+
+
+def tpu_roofline_us(M, K, N, n, m, dtype_bytes=2):
+    """Pallas-kernel roofline: compute vs memory bound time (us/GEMM)."""
+    flops = 2 * M * N * K * n / m                    # only nnz contribute
+    bytes_ = (M * K * n / m + K * N + M * N) * dtype_bytes
+    t_c = flops / 197e12
+    t_m = bytes_ / 819e9
+    return max(t_c, t_m) * 1e6, ("compute" if t_c > t_m else "memory")
+
+
+def main(M=768, K=3072, N=4096, quick=False):
+    if quick:
+        M, K, N = 256, 768, 1024
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (M, K), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(1), (K, N), jnp.float32)
+
+    dense = jax.jit(lambda a, b: a @ b)
+    t_dense = time_fn(dense, a, b)
+    print("kernel,sparsity,us_per_gemm,speedup_vs_dense,tpu_roofline_us")
+    d_ro, _ = tpu_roofline_us(M, K, N, 1, 1)
+    print(f"dense,0.00,{t_dense * 1e6:.0f},1.00,{2*M*N*K/197e12*1e6:.1f}")
+
+    for n, m, g in [(2, 4, 16), (1, 4, 16), (1, 10, 4)]:
+        t = nmg.dense_to_grouped_nm(a, n=n, m=m, g=g, gr=16)
+        f = jax.jit(lambda t, b: kops.nmg_spmm_xla(t, b))
+        t_sp = time_fn(f, t, b)
+        ro, bound = tpu_roofline_us(M, K, N, n, m)
+        print(f"{n}:{m}:{g},{1 - n / m:.2f},{t_sp * 1e6:.0f},"
+              f"{t_dense / t_sp:.2f},{ro:.1f}({bound})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Paper Fig 11: end-to-end sparse inference latency, dense vs n:m:g.
+
+Measured on CPU/XLA at a reduced BERT scale (the TPU-scale picture is the
+dry-run roofline).  Reports prefill latency for batch x seq, dense weights
+vs GroupedNM FFN weights at several sparsities.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_fn
+from repro.configs import get_smoke
+from repro.core.builder import SparsityBuilder
+from repro.core.layouts import GroupedNMTensor
+from repro.core.sparsifiers import GroupedNMSparsifier
+from repro.models import forward, init_lm, logits_of
+
+
+def main(quick=False):
+    cfg = get_smoke("bert-base-sten").scaled(
+        d_model=256, d_ff=1024, n_layers=4, n_heads=8, head_dim=32,
+        vocab=4096, dtype="float32",
+    )
+    B, S = (2, 64) if quick else (4, 128)
+    key = jax.random.PRNGKey(0)
+    params = init_lm(key, cfg)
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab, jnp.int32)
+
+    @jax.jit
+    def infer(p, t):
+        h, _ = forward(p, cfg, t, remat="none")
+        return logits_of(p, cfg, h[:, -1:])
+
+    t_dense = time_fn(infer, params, toks)
+    print("weights,us_per_batch,speedup")
+    print(f"dense,{t_dense * 1e6:.0f},1.00")
+
+    for n, m, g in [(2, 4, 16), (1, 4, 16), (1, 10, 4)]:
+        sb = SparsityBuilder()
+        sb.set_weight("*mlp.w*", GroupedNMSparsifier(n, m, g, gr=16,
+                                                     sparse_dim=0),
+                      GroupedNMTensor)
+        sp = sb.sparsify_params(params)
+        t_sp = time_fn(infer, sp, toks)
+        print(f"nmg-{n}:{m}:{g},{t_sp * 1e6:.0f},{t_dense / t_sp:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Paper Fig 7: energy (||X_hat||_1 / ||X||_1) vs sparsity structure.
+
+Compares unstructured, n:m, n:m:g (several g), and blocked sparsity on a
+BERT_BASE FFN-sized weight tensor (768 x 3072), plus the TPU row-sharing
+(gr) adaptation cost.  Expected trends (validated in tests/test_nmg.py):
+unstructured >= n:m >= n:m:g(large g) >= n:m:g(small g) >= blocked.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import nmg
+
+
+def main(rows=768, cols=3072, seed=0, quick=False):
+    if quick:
+        rows, cols = 256, 768
+    x = jax.random.normal(jax.random.PRNGKey(seed), (rows, cols))
+    print("format,sparsity,energy")
+    for n, m in [(2, 4), (1, 4), (1, 10)]:
+        s = 1 - n / m
+        e_un = float(nmg.energy(x * nmg.unstructured_mask(x, s), x))
+        print(f"unstructured,{s:.2f},{e_un:.4f}")
+        e_nm = float(nmg.energy(x * nmg.nm_mask(x, n, m), x))
+        print(f"{n}:{m},{s:.2f},{e_nm:.4f}")
+        for g in (1, 4, 16):
+            t = nmg.dense_to_grouped_nm(x, n, m, g)
+            e = float(nmg.energy(t.to_dense(), x))
+            print(f"{n}:{m}:{g},{s:.2f},{e:.4f}")
+        for gr in (8, 128):
+            t = nmg.dense_to_grouped_nm(x, n, m, 16, gr=gr)
+            e = float(nmg.energy(t.to_dense(), x))
+            print(f"{n}:{m}:16/gr{gr},{s:.2f},{e:.4f}")
+        e_bl = float(nmg.energy(x * nmg.blocked_mask(x, m, s), x))
+        print(f"blocked{m},{s:.2f},{e_bl:.4f}")
+
+
+if __name__ == "__main__":
+    main()

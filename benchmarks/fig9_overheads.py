@@ -1,0 +1,97 @@
+"""Paper Fig 9: masked sparse-training overheads vs dense.
+
+Measures per-step wall time of the reduced BERT config: dense training,
+masked training with a *fixed* sparsification (the common regime), and with
+*new* sparsification (pattern recompute) every step, for unstructured and
+n:m:g masks.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_fn
+from repro.configs import get_smoke
+from repro.core.builder import SparsityBuilder
+from repro.core.layouts import FixedMaskTensor
+from repro.core.sparsifiers import GroupedNMSparsifier, ScalarFractionSparsifier
+from repro.models import init_lm, loss_fn
+from repro.optim import AdamWConfig, adamw_init, adamw_update, \
+    value_and_grad_sparse
+from repro.optim.sparse_update import resparsify_params
+
+
+def make_step(cfg, recompute):
+    opt_cfg = AdamWConfig(lr=1e-4)
+
+    @functools.partial(jax.jit, donate_argnums=(0, 1))
+    def step(params, state, batch):
+        (loss, _), g = value_and_grad_sparse(
+            lambda p: loss_fn(p, cfg, batch, remat="none"), has_aux=True
+        )(params)
+        p2, s2, _ = adamw_update(g, state, params, opt_cfg)
+        p2 = resparsify_params(p2, recompute_pattern=recompute)
+        return p2, s2, loss
+
+    return step
+
+
+def main(quick=False):
+    cfg = get_smoke("bert-base-sten")
+    if not quick:
+        cfg = cfg.scaled(d_model=128, d_ff=512, n_layers=4, n_heads=8,
+                         head_dim=16, vocab=2048)
+    key = jax.random.PRNGKey(0)
+    B, S = 8, 128
+    batch = {
+        "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab),
+        "labels": jax.random.randint(key, (B, S), 0, cfg.vocab),
+    }
+
+    def bench(params, recompute, name, t_base=None):
+        state = adamw_init(params)
+        step = make_step(cfg, recompute)
+
+        def run(p, s):
+            p2, s2, l = step(p, s, batch)
+            return p2, s2, l
+
+        # time with fresh copies (donation consumes buffers)
+        import time as _t
+        outs = step(params, state, batch)
+        jax.block_until_ready(outs)
+        p2, s2, _ = outs
+        ts = []
+        for _ in range(5):
+            t0 = _t.perf_counter()
+            p2, s2, l = step(p2, s2, batch)
+            jax.block_until_ready(l)
+            ts.append(_t.perf_counter() - t0)
+        ts.sort()
+        t = ts[len(ts) // 2]
+        over = "" if t_base is None else f",{(t / t_base - 1) * 100:.0f}%"
+        print(f"{name},{t * 1e3:.1f}ms{over}")
+        return t
+
+    print("variant,ms_per_step,overhead_vs_dense")
+    params = init_lm(key, cfg)
+    t_dense = bench(params, False, "dense")
+
+    sb = SparsityBuilder()
+    sb.set_weight("*mlp*", ScalarFractionSparsifier(0.75), FixedMaskTensor)
+    sb.set_weight("*attn.w*", ScalarFractionSparsifier(0.75), FixedMaskTensor)
+    sp = sb.sparsify_params(init_lm(key, cfg))
+    bench(sp, False, "unstructured-fixed", t_dense)
+    bench(sb.sparsify_params(init_lm(key, cfg)), True,
+          "unstructured-new", t_dense)
+
+    sb2 = SparsityBuilder()
+    sb2.set_weight("*mlp*", GroupedNMSparsifier(1, 4, 16, sparse_dim=0),
+                   FixedMaskTensor)
+    bench(sb2.sparsify_params(init_lm(key, cfg)), False, "nmg-fixed", t_dense)
+    bench(sb2.sparsify_params(init_lm(key, cfg)), True, "nmg-new", t_dense)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Benchmark harness: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+
+Prints each benchmark's CSV block plus a trailing summary in
+``name,us_per_call,derived`` form.
+"""
+
+import argparse
+import time
+import traceback
+
+from benchmarks import (
+    fig7_energy,
+    fig8_finetune,
+    fig9_overheads,
+    fig10_gemm,
+    fig11_e2e,
+    table2_productivity,
+    weak_scaling,
+)
+
+BENCHES = [
+    ("fig7_energy", fig7_energy.main),
+    ("fig10_gemm", fig10_gemm.main),
+    ("fig9_overheads", fig9_overheads.main),
+    ("fig11_e2e", fig11_e2e.main),
+    ("fig8_finetune", fig8_finetune.main),
+    ("table2_productivity", table2_productivity.main),
+    ("weak_scaling", weak_scaling.main),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    summary = []
+    for name, fn in BENCHES:
+        if args.only and args.only != name:
+            continue
+        print(f"\n=== {name} " + "=" * (60 - len(name)), flush=True)
+        t0 = time.time()
+        try:
+            fn(quick=args.quick)
+            summary.append((name, time.time() - t0, "ok"))
+        except Exception as e:  # keep the harness going
+            traceback.print_exc()
+            summary.append((name, time.time() - t0, f"FAIL:{type(e).__name__}"))
+
+    print("\n=== summary ===")
+    print("name,us_per_call,derived")
+    for name, secs, status in summary:
+        print(f"{name},{secs * 1e6:.0f},{status}")
+    if any("FAIL" in s for _, _, s in summary):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Sparse inference serving (paper Fig 11 scenario): batch-serve a model
+whose FFN weights are stored in the n:m:g layout, comparing dense vs sparse
+latency.
+
+    PYTHONPATH=src python examples/sparse_serve.py [--arch bert-base-sten]
+"""
+
+import argparse
+
+from repro.launch import serve as serve_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="bert-base-sten")
+    ap.add_argument("--full", action="store_true",
+                    help="use the full (non-smoke) config")
+    args = ap.parse_args()
+
+    base = ["--arch", args.arch, "--batch", "4", "--prompt-len", "32",
+            "--gen-len", "12"]
+    if not args.full:
+        base.append("--smoke")
+    print("== dense ==")
+    serve_mod.main(base)
+    print("== n:m:g 1:4:16 ==")
+    serve_mod.main(base + ["--sparse", "--nm", "1:4:16"])
+
+
+if __name__ == "__main__":
+    main()

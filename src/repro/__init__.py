@@ -1,0 +1,8 @@
+"""repro — STen-JAX: productive and efficient sparsity for JAX/TPU at pod
+scale.  Reproduction + extension of Ivanov et al., "STen: Productive and
+Efficient Sparsity in PyTorch" (2023).
+
+``repro.sten`` is the user-facing namespace mirroring the paper's API.
+"""
+
+__version__ = "1.0.0"

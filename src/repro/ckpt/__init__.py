@@ -1,0 +1,1 @@
+from repro.ckpt.checkpoint import CheckpointManager, load_pytree, save_pytree

@@ -1,0 +1,8 @@
+from repro.configs.registry import (
+    ARCHS,
+    SHAPES,
+    get_arch,
+    get_smoke,
+    input_specs,
+    runnable_cells,
+)

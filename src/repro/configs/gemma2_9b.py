@@ -1,0 +1,36 @@
+"""gemma2-9b [dense]: 42L d_model=3584 16H (GQA kv=8) d_ff=14336
+vocab=256000 — local+global alternating, logit softcap [arXiv:2408.00118].
+
+long_500k RUNS for this arch (not pure full attention): local layers keep a
+4096-window ring cache; global layers hold the full 500k cache (decode is
+linear per token; memory shards over the mesh)."""
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-9b",
+    vocab=256000,
+    d_model=3584,
+    n_layers=42,
+    n_heads=16,
+    n_kv_heads=8,
+    head_dim=256,
+    d_ff=14336,
+    attn_type="gqa",
+    layer_pattern="alt_local_global",
+    local_window=4096,
+    attn_softcap=50.0,
+    logit_softcap=30.0,
+    post_norms=True,
+    act="gelu",
+    gated_mlp=True,
+    tie_embeddings=True,
+)
+
+SMOKE = CONFIG.scaled(
+    vocab=512, d_model=64, n_layers=4, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=128, local_window=16,
+)
+
+FAMILY = "dense"
+SKIP_LONG = None  # runs: local+global alternation is sub-quadratic locally

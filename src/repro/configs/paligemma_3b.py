@@ -1,0 +1,32 @@
+"""paligemma-3b [vlm]: 18L d_model=2048 8H (MQA kv=1) d_ff=16384 vocab=257216
+— SigLIP + gemma [arXiv:2407.07726; hf].
+
+The vision frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed patch embeddings [B, 256, d_model]; the backbone applies a
+prefix-LM mask (bidirectional over the image prefix)."""
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="paligemma-3b",
+    vocab=257216,
+    d_model=2048,
+    n_layers=18,
+    n_heads=8,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=16384,
+    attn_type="gqa",
+    act="gelu",
+    gated_mlp=True,
+    tie_embeddings=True,
+    vision_prefix=256,
+)
+
+SMOKE = CONFIG.scaled(
+    vocab=512, d_model=64, n_layers=2, n_heads=4, n_kv_heads=1, head_dim=16,
+    d_ff=128, vision_prefix=8,
+)
+
+FAMILY = "vlm"
+SKIP_LONG = "pure full attention (quadratic 524288 prefill / full cache)"

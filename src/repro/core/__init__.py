@@ -1,0 +1,63 @@
+"""STen-JAX core: the sparsity programming model (layouts, operators,
+sparsifiers) from *STen: Productive and Efficient Sparsity in PyTorch*,
+re-implemented natively for JAX.  See DESIGN.md for the adaptation notes.
+"""
+
+from repro.core.layouts import (
+    CooTensor,
+    CsrTensor,
+    DenseTensor,
+    FixedMaskTensor,
+    GroupedNMTensor,
+    NMTensor,
+    SparsityLayout,
+    all_layouts,
+    nm_patterns,
+    register_layout,
+)
+from repro.core.sparsifiers import (
+    BlockwiseFractionSparsifier,
+    GroupedNMSparsifier,
+    KeepAll,
+    NMSparsifier,
+    RandomFractionSparsifier,
+    SameFormatSparsifier,
+    ScalarFractionSparsifier,
+    ScalarThresholdSparsifier,
+    Sparsifier,
+    apply_sparsifier,
+    register_sparsifier_implementation,
+)
+from repro.core.convert import as_layout, convert, lossless_targets
+from repro.core.dispatch import (
+    OutFormat,
+    SparseFallbackWarning,
+    dispatch,
+    register_op_impl,
+    register_patched_op,
+    sparse_op_table,
+    sparsified_op,
+)
+from repro.core import ops  # registers built-in implementations
+from repro.core.ops import add, gelu, linear, matmul, relu
+from repro.core.builder import (
+    SparsityBuilder,
+    SparsityPlan,
+    flatten_with_names,
+    tag,
+    trace_intermediates,
+)
+from repro.core.autograd import (
+    dense_grad_of,
+    masked_grad,
+    sparsify_grads,
+    straight_through,
+)
+from repro.core.nmg import (
+    dense_to_grouped_nm,
+    energy,
+    grouped_nm_mask,
+    grouped_nm_to_dense,
+    nm_mask,
+    unstructured_mask,
+)

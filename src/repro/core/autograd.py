@@ -1,0 +1,116 @@
+"""Gradient plumbing for sparse layouts (paper §4.5 + §3.4 grad formats).
+
+Two facts make STen's backprop story simpler in JAX than in PyTorch:
+
+1.  Every layout's ``to_dense`` is a differentiable jnp composition, so
+    ``jax.grad`` of any loss through sparse parameters works out of the box —
+    the cotangent of a layout is a layout-structured pytree whose ``val``
+    leaf carries the gradient w.r.t. the *stored* values.  Index/mask leaves
+    are integer/bool and get symbolic-zero cotangents.  This is the
+    "transparent backpropagation" of §4.5 without any autograd extension.
+
+2.  JAX requires cotangent pytrees to mirror primal structure, so STen's
+    *independent gradient formats* (a CSR weight with an n:m gradient, §3.4)
+    are applied where the gradient becomes a value: just before the optimizer
+    consumes it.  ``sparsify_grads`` does that, driven by the
+    ``grad_out_fmt``s collected by the SparsityBuilder.
+
+``masked_grad``/``straight_through`` implement the two standard conventions
+for gradients of pruned weights during masked sparse training.
+"""
+
+from __future__ import annotations
+
+import fnmatch
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.builder import path_name
+from repro.core.dispatch import OutFormat
+from repro.core.layouts import FixedMaskTensor, SparsityLayout
+from repro.core.sparsifiers import KeepAll, apply_sparsifier
+
+__all__ = [
+    "grad_values",
+    "dense_grad_of",
+    "sparsify_grads",
+    "masked_grad",
+    "straight_through",
+]
+
+
+def grad_values(grad_leaf):
+    """The value-carrying array of a layout cotangent."""
+    if isinstance(grad_leaf, FixedMaskTensor):
+        return grad_leaf.val
+    if isinstance(grad_leaf, SparsityLayout):
+        return getattr(grad_leaf, "val", getattr(grad_leaf, "data", None))
+    return grad_leaf
+
+
+def dense_grad_of(primal, grad_leaf):
+    """Densify a layout-structured cotangent into the dense-space gradient
+    (scatter values at the primal's nonzero locations)."""
+    if not isinstance(primal, SparsityLayout):
+        return grad_leaf
+    if isinstance(primal, FixedMaskTensor):
+        g = grad_leaf.val if isinstance(grad_leaf, FixedMaskTensor) else grad_leaf
+        return g * primal.mask.astype(g.dtype)
+    # generic: rebuild a same-layout tensor holding grad values, densify
+    vals = grad_values(grad_leaf)
+    clone = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(primal),
+        [
+            vals if l is _value_leaf(primal) else l
+            for l in jax.tree_util.tree_leaves(primal)
+        ],
+    )
+    return clone.to_dense()
+
+
+def _value_leaf(layout):
+    return getattr(layout, "val", getattr(layout, "data", None))
+
+
+def sparsify_grads(grads, grad_formats: dict[str, OutFormat],
+                   key: Optional[jax.Array] = None):
+    """Apply per-weight gradient output formats (paper §3.4
+    ``set_weight_grad``): the named gradients are re-sparsified with the
+    format's external sparsifier before the optimizer sees them."""
+    if not grad_formats:
+        return grads
+
+    def visit(path, g):
+        name = path_name(path)
+        for pattern, fmt in grad_formats.items():
+            if fnmatch.fnmatch(name, pattern):
+                if fmt is None or isinstance(fmt.external, KeepAll):
+                    return g
+                dense = g.to_dense() if isinstance(g, SparsityLayout) else g
+                out = apply_sparsifier(fmt.external, dense, fmt.out_layout,
+                                       key=key)
+                # keep pytree structure: return masked dense values
+                masked = out.to_dense() if isinstance(out, SparsityLayout) else out
+                if isinstance(g, FixedMaskTensor):
+                    return FixedMaskTensor(masked, g.mask)
+                return masked
+        return g
+
+    return jax.tree_util.tree_map_with_path(
+        visit, grads, is_leaf=lambda x: isinstance(x, SparsityLayout)
+    )
+
+
+def masked_grad(grad: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Gradient convention A: pruned weights receive no gradient (the mask
+    gates the backward pass, matching masked-dense forward semantics)."""
+    return grad * mask.astype(grad.dtype)
+
+
+def straight_through(grad: jnp.ndarray) -> jnp.ndarray:
+    """Gradient convention B (STE): gradients flow to pruned weights too, so
+    they may regrow when the mask is recomputed (used by iterative magnitude
+    pruning so pruning decisions can be revisited)."""
+    return grad

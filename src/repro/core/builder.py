@@ -1,0 +1,269 @@
+"""SparsityBuilder — sparsifying existing models (paper §3.4, §4.1).
+
+STen uses torch.fx tracing to find intermediate tensors of an existing model
+and replaces operators with dispatcher wrappers.  JAX has no general symbolic
+tracer over arbitrary Python, so STen-JAX uses **named intermediate tags**:
+model code calls ``tag("block.gelu", x)`` at tensor-producing sites (our model
+zoo does this at every activation/projection worth sparsifying), and a
+``SparsityBuilder`` plan activated around the forward pass decides — at trace
+time — whether that site sparsifies, with which (inline, tmp, external, out)
+format.  ``trace_intermediates`` enumerates the taggable sites of a model the
+way ``torch.fx`` + ``named_modules`` would (name, shape, dtype), so users can
+discover names without reading model code.
+
+Weights are sparsified directly on the params pytree (paths are
+``a.b.c``-joined pytree keys, with fnmatch globs supported), mirroring how
+"PyTorch Parameters are easily accessible and modifiable" (§4.1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+import threading
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dispatch import OutFormat
+from repro.core.layouts import DenseTensor, SparsityLayout
+from repro.core.sparsifiers import (
+    KeepAll,
+    SameFormatSparsifier,
+    Sparsifier,
+    apply_sparsifier,
+)
+
+__all__ = [
+    "SparsityBuilder",
+    "SparsityPlan",
+    "tag",
+    "trace_intermediates",
+    "path_name",
+    "flatten_with_names",
+]
+
+_ACTIVE = threading.local()
+
+
+def path_name(path) -> str:
+    """Join a jax tree path into an 'a.b.c' name."""
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return ".".join(parts)
+
+
+def flatten_with_names(tree):
+    leaves = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: isinstance(x, SparsityLayout)
+    )[0]
+    return [(path_name(p), v) for p, v in leaves]
+
+
+@dataclasses.dataclass
+class WeightRule:
+    pattern: str
+    initial_sparsifier: Sparsifier
+    out_format: type
+    grad_fmt: Optional[OutFormat] = None
+
+
+@dataclasses.dataclass
+class IntermRule:
+    pattern: str
+    fmt: OutFormat
+    grad_fmt: Optional[OutFormat] = None
+
+
+@dataclasses.dataclass
+class SparsityPlan:
+    """The compiled sparsification plan consulted by ``tag`` at trace time."""
+
+    weight_rules: list
+    interm_rules: list
+    recording: Optional[list] = None  # set by trace_intermediates
+
+    def interm_rule_for(self, name: str) -> Optional[IntermRule]:
+        for r in self.interm_rules:
+            if fnmatch.fnmatch(name, r.pattern):
+                return r
+        return None
+
+    def weight_rule_for(self, name: str) -> Optional[WeightRule]:
+        for r in self.weight_rules:
+            if fnmatch.fnmatch(name, r.pattern):
+                return r
+        return None
+
+    def __enter__(self):
+        _ACTIVE.plan = self
+        return self
+
+    def __exit__(self, *exc):
+        _ACTIVE.plan = None
+
+
+def tag(name: str, x: jnp.ndarray, key: Optional[jax.Array] = None):
+    """Named intermediate hook.  A no-op (identity) unless a plan is active
+    and has a rule matching ``name`` — then the (inline, tmp, external, out)
+    output format is applied and the *masked dense* value is returned so the
+    surrounding (dense) model code keeps working: this is exactly STen's
+    masked-dense emulation path for intermediate tensors."""
+    plan: Optional[SparsityPlan] = getattr(_ACTIVE, "plan", None)
+    if plan is None:
+        return x
+    if plan.recording is not None:
+        plan.recording.append((name, tuple(x.shape), str(x.dtype)))
+        return x
+    rule = plan.interm_rule_for(name)
+    if rule is None:
+        return x
+    fmt = rule.fmt
+    y = x
+    if not isinstance(fmt.inline, KeepAll):
+        y = fmt.inline(y, key)
+    if not isinstance(fmt.external, KeepAll):
+        out = apply_sparsifier(fmt.external, y, fmt.out_layout, key=key)
+        y = out.to_dense() if isinstance(out, SparsityLayout) else out
+    return y
+
+
+def tag_layout(name: str, x: jnp.ndarray, key: Optional[jax.Array] = None):
+    """Like ``tag`` but returns the layout instance (for sparse-aware
+    callers that continue with sten ops)."""
+    plan: Optional[SparsityPlan] = getattr(_ACTIVE, "plan", None)
+    if plan is None or plan.recording is not None:
+        return tag(name, x, key)
+    rule = plan.interm_rule_for(name)
+    if rule is None:
+        return x
+    fmt = rule.fmt
+    y = fmt.inline(x, key) if not isinstance(fmt.inline, KeepAll) else x
+    return apply_sparsifier(fmt.external, y, fmt.out_layout, key=key)
+
+
+def trace_intermediates(fn: Callable, *args, **kwargs):
+    """Enumerate taggable intermediate sites: returns
+    [(name, shape, dtype), ...] — the JAX stand-in for fx tracing (§4.1)."""
+    plan = SparsityPlan([], [], recording=[])
+    with plan:
+        jax.eval_shape(lambda *a, **k: fn(*a, **k), *args, **kwargs)
+    return list(plan.recording)
+
+
+class SparsityBuilder:
+    """Paper §3.4 API: mark weights/intermediates sparse, then build the
+    sparse model.
+
+    >>> sb = SparsityBuilder()
+    >>> sb.set_weight("mlp.w1", GroupedNMSparsifier(1, 4, 16), FixedMaskTensor)
+    >>> sb.set_interm("mlp.gelu", inline_sparsifier=ScalarThreshold(0.1))
+    >>> sparse_params, sparse_apply = sb.get_sparse_model(params, apply_fn)
+    """
+
+    def __init__(self):
+        self._weights: list[WeightRule] = []
+        self._interms: list[IntermRule] = []
+
+    # -- weights ----------------------------------------------------------
+    def set_weight(self, name: str, initial_sparsifier: Sparsifier,
+                   out_format: type = None, grad_fmt: OutFormat | None = None):
+        from repro.core.layouts import FixedMaskTensor
+
+        self._weights.append(
+            WeightRule(name, initial_sparsifier, out_format or FixedMaskTensor,
+                       grad_fmt)
+        )
+        return self
+
+    def set_weight_grad(self, name: str, fmt: OutFormat):
+        for r in self._weights:
+            if r.pattern == name:
+                r.grad_fmt = fmt
+                return self
+        self._weights.append(WeightRule(name, KeepAll(), DenseTensor, fmt))
+        return self
+
+    # -- intermediates ----------------------------------------------------
+    def set_interm(self, name: str, inline_sparsifier: Sparsifier = KeepAll(),
+                   tmp_format: type = DenseTensor,
+                   external_sparsifier: Sparsifier = KeepAll(),
+                   out_format: type = DenseTensor,
+                   grad_fmt: OutFormat | None = None):
+        self._interms.append(
+            IntermRule(
+                name,
+                OutFormat(inline_sparsifier, tmp_format, external_sparsifier,
+                          out_format),
+                grad_fmt,
+            )
+        )
+        return self
+
+    def set_interm_grad(self, name: str, fmt: OutFormat):
+        self._interms.append(IntermRule(name, OutFormat(), fmt))
+        return self
+
+    # -- build ------------------------------------------------------------
+    def plan(self) -> SparsityPlan:
+        return SparsityPlan(list(self._weights), list(self._interms))
+
+    def sparsify_params(self, params, key: Optional[jax.Array] = None):
+        """Apply weight rules to a params pytree: matching leaves are
+        replaced by sparse layout instances (the ``SparseParameterWrapper``
+        equivalent — in JAX the layout *is* the parameter)."""
+        plan = self.plan()
+
+        def visit(path, leaf):
+            name = path_name(path)
+            rule = plan.weight_rule_for(name)
+            if rule is None or isinstance(leaf, SparsityLayout):
+                return leaf
+            if getattr(leaf, "ndim", 0) == 3:
+                # scan-stacked [L, ...] weight: sparsify per layer (the
+                # paper's *local* pruning) and re-stack the layout pytree —
+                # lax.scan then slices per-layer layouts back out naturally.
+                parts = [
+                    apply_sparsifier(rule.initial_sparsifier, leaf[i],
+                                     rule.out_format, key=key)
+                    for i in range(leaf.shape[0])
+                ]
+                import jax.numpy as _jnp
+
+                return jax.tree_util.tree_map(
+                    lambda *xs: _jnp.stack(xs), *parts
+                )
+            return apply_sparsifier(
+                rule.initial_sparsifier, leaf, rule.out_format, key=key
+            )
+
+        return jax.tree_util.tree_map_with_path(visit, params)
+
+    def get_sparse_model(self, params, apply_fn: Callable,
+                         key: Optional[jax.Array] = None):
+        """Returns (sparse_params, sparse_apply).  ``sparse_apply`` runs
+        ``apply_fn`` with the sparsity plan active so intermediate tags
+        fire; weights were already converted to layouts."""
+        sparse_params = self.sparsify_params(params, key=key)
+        plan = self.plan()
+
+        def sparse_apply(p, *args, **kwargs):
+            with plan:
+                return apply_fn(p, *args, **kwargs)
+
+        return sparse_params, sparse_apply
+
+    # -- introspection -----------------------------------------------------
+    def grad_formats(self) -> dict[str, OutFormat]:
+        return {
+            r.pattern: r.grad_fmt for r in self._weights if r.grad_fmt is not None
+        }

@@ -1,0 +1,68 @@
+"""Lossless layout-conversion graph (paper §4.4).
+
+STen only auto-converts between layouts when the conversion is provably
+lossless, to avoid silent information loss.  Every layout -> Dense is
+lossless by construction (``to_dense`` reproduces exact values); Dense ->
+{CSR, COO, FixedMask} are lossless; structured formats (NM, GroupedNM) are
+lossless *from* but lossy *to* (their sparsifier drops values), so they are
+never auto-converted *into*.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.layouts import (
+    CooTensor,
+    CsrTensor,
+    DenseTensor,
+    FixedMaskTensor,
+    GroupedNMTensor,
+    NMTensor,
+    SparsityLayout,
+)
+
+__all__ = ["convert", "lossless_targets", "as_layout"]
+
+
+def as_layout(x) -> SparsityLayout:
+    return x if isinstance(x, SparsityLayout) else DenseTensor(jnp.asarray(x))
+
+
+#: layouts reachable losslessly from each layout (besides itself)
+_LOSSLESS: dict[type, tuple[type, ...]] = {
+    DenseTensor: (CsrTensor, CooTensor, FixedMaskTensor),
+    CsrTensor: (DenseTensor, CooTensor, FixedMaskTensor),
+    CooTensor: (DenseTensor, CsrTensor, FixedMaskTensor),
+    FixedMaskTensor: (DenseTensor, CsrTensor, CooTensor),
+    NMTensor: (DenseTensor, FixedMaskTensor, CsrTensor, CooTensor),
+    GroupedNMTensor: (DenseTensor, FixedMaskTensor, CsrTensor, CooTensor),
+}
+
+
+def lossless_targets(layout_cls: type) -> tuple[type, ...]:
+    return (layout_cls,) + _LOSSLESS.get(layout_cls, (DenseTensor,))
+
+
+def convert(x, target: type):
+    """Losslessly convert ``x`` to layout class ``target``.
+
+    Raises TypeError when the conversion would be lossy (never silently
+    drops values — paper §4.4)."""
+    x = as_layout(x)
+    if isinstance(x, target):
+        return x
+    if target not in lossless_targets(type(x)):
+        raise TypeError(
+            f"no lossless conversion {type(x).__name__} -> {target.__name__}"
+        )
+    dense = x.to_dense()
+    if target is DenseTensor:
+        return DenseTensor(dense)
+    if target is FixedMaskTensor:
+        return FixedMaskTensor(dense, dense != 0)
+    if target is CsrTensor:
+        return CsrTensor.from_dense(dense)
+    if target is CooTensor:
+        return CooTensor.from_dense(dense)
+    raise TypeError(f"unhandled conversion target {target}")

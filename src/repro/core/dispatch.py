@@ -1,0 +1,305 @@
+"""Operator registry & sparse dispatch (paper §3.2, §4.4, Figs 3-4).
+
+STen's PyTorch dispatcher intercepts tensor-extension calls at runtime.  In
+JAX everything is staged, so dispatch happens **at trace time** on the layout
+*classes* of the operands — after ``jit`` there is literally zero dispatch
+overhead, which removes the "STen runtime" slice of the paper's Fig 11
+latency breakdown by construction.
+
+Lookup order (mirrors Fig 3):
+  1. exact registered implementation for (op, input-layout signature);
+  2. lossless conversion of inputs to a registered signature (minimum number
+     of conversions; never lossy — paper §4.4);
+  3. dense fallback: densify all operands, call the reference dense op, and
+     warn (``warnings.warn`` with ``SparseFallbackWarning``).
+
+Sparse operators (= operator + output format) are built with
+``sparsified_op(orig_op, out_fmt, grad_out_fmt)`` where each output format is
+the 4-tuple ``(inline_sparsifier, tmp_layout, external_sparsifier,
+out_layout)`` of paper §3.3.  Implementations may register themselves as
+*fused* for a given inline sparsifier class, in which case the dispatcher
+skips the separate inline-sparsifier application.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import warnings
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+import importlib
+
+# module object import (the package re-exports a function named ``convert``)
+conv = importlib.import_module("repro.core.convert")
+from repro.core.layouts import DenseTensor, SparsityLayout
+from repro.core.sparsifiers import (
+    KeepAll,
+    SameFormatSparsifier,
+    Sparsifier,
+    apply_sparsifier,
+)
+
+__all__ = [
+    "SparseFallbackWarning",
+    "register_op_impl",
+    "register_patched_op",
+    "dispatch",
+    "sparsified_op",
+    "OutFormat",
+    "sparse_op_table",
+]
+
+
+class SparseFallbackWarning(UserWarning):
+    """Raised when no sparse implementation exists and STen falls back to a
+    dense implementation (paper §3.2: 'falls back to a dense implementation
+    with masks and issues a warning')."""
+
+
+# (op_name, in_sig tuple, inline_sparsifier_cls_or_None) -> impl
+_OP_IMPLS: dict[tuple, Callable] = {}
+#: reference dense callables per op name (the fallback implementations)
+_DENSE_OPS: dict[str, Callable] = {}
+#: external callables patched into the dispatcher (paper §4.4 patching API)
+_PATCHED: dict[Callable, str] = {}
+
+
+def _canonical_name(op) -> str:
+    if isinstance(op, str):
+        return op
+    name = getattr(op, "__name__", None)
+    if name is None:  # functools.partial etc.
+        name = repr(op)
+    return name
+
+
+def register_dense_reference(op_name: str, fn: Callable):
+    _DENSE_OPS[op_name] = fn
+
+
+def register_op_impl(op, inp: Sequence[type], out: type | None = None,
+                     inline: type | None = None):
+    """Decorator: register a sparse implementation for ``op``.
+
+    ``inp`` is the tuple of input layout classes; ``out`` (optional) the
+    produced layout class; ``inline`` (optional) a streaming/blocking
+    sparsifier class the implementation fuses (paper §3.3).
+    """
+    op_name = _canonical_name(op)
+    if callable(op) and op_name not in _DENSE_OPS:
+        # remember a dense reference if the registered symbol is the dense op
+        pass
+
+    def deco(fn):
+        key = (op_name, tuple(inp), inline)
+        if key in _OP_IMPLS:
+            raise ValueError(f"duplicate op impl {key}")
+        _OP_IMPLS[key] = fn
+        fn._sten_out_layout = out
+        return fn
+
+    return deco
+
+
+def register_patched_op(fn: Callable, op_name: str | None = None):
+    """Paper §4.4 'patching API': route an arbitrary callable through the
+    sparse dispatcher when any argument is a sparse layout.  Returns the
+    wrapped callable."""
+    name = op_name or _canonical_name(fn)
+    _DENSE_OPS.setdefault(name, fn)
+    _PATCHED[fn] = name
+
+    def wrapped(*args, **kwargs):
+        if any(isinstance(a, SparsityLayout) for a in args):
+            return dispatch(name, *args, **kwargs)
+        return fn(*args, **kwargs)
+
+    wrapped.__name__ = name
+    return wrapped
+
+
+def sparse_op_table() -> dict:
+    """Introspection: the registered sparse-op table (for docs/tests)."""
+    return dict(_OP_IMPLS)
+
+
+def _signature(args) -> tuple:
+    sig = []
+    for a in args:
+        if isinstance(a, SparsityLayout):
+            sig.append(type(a))
+        else:
+            sig.append(DenseTensor)
+    return tuple(sig)
+
+
+def _find_impl(op_name: str, sig: tuple, inline: type | None):
+    """Exact then conversion-based lookup.  Returns (impl, conversions) where
+    conversions is a tuple of target layout classes per arg (None = as-is),
+    or (None, None)."""
+    key = (op_name, sig, inline)
+    if key in _OP_IMPLS:
+        return _OP_IMPLS[key], None
+    # conversion search: all registered signatures for this op & inline,
+    # scored by number of converted arguments (fewest wins).
+    candidates = []
+    for (name, s, inl), impl in _OP_IMPLS.items():
+        if name != op_name or inl is not inline or len(s) != len(sig):
+            continue
+        nconv = 0
+        ok = True
+        for have, want in zip(sig, s):
+            if have is want:
+                continue
+            if want in conv.lossless_targets(have):
+                nconv += 1
+            else:
+                ok = False
+                break
+        if ok:
+            candidates.append((nconv, s, impl))
+    if not candidates:
+        return None, None
+    candidates.sort(key=lambda t: t[0])
+    _, target_sig, impl = candidates[0]
+    return impl, target_sig
+
+
+def dispatch(op, *args, inline: Optional[Sparsifier] = None,
+             dense_fn: Optional[Callable] = None, **kwargs):
+    """Dispatch ``op`` on (possibly sparse) ``args``.
+
+    Returns whatever the implementation returns (a dense array or a layout
+    instance).  ``dense_fn`` overrides the dense fallback implementation.
+    """
+    op_name = _canonical_name(op)
+    sig = _signature(args)
+    inline_cls = type(inline) if inline is not None else None
+
+    # all-dense fast path: plain dense op, no sparse registry involved
+    # (PyTorch-STen similarly only intercepts calls with sparse operands)
+    if not any(isinstance(a, SparsityLayout) for a in args):
+        fallback = dense_fn or _DENSE_OPS.get(op_name) or (
+            op if callable(op) else None
+        )
+        if fallback is not None:
+            out = fallback(*args, **kwargs)
+            if inline is not None and not isinstance(inline, KeepAll):
+                out = inline(out)
+            return out
+
+    # 1 & 2: exact or conversion-reachable sparse implementation
+    impl, target_sig = _find_impl(op_name, sig, inline_cls)
+    if impl is None and inline_cls is not None:
+        # fall back to non-fused implementation; inline sparsifier will be
+        # applied separately by the caller (sparsified_op).
+        impl, target_sig = _find_impl(op_name, sig, None)
+        if impl is not None:
+            impl = _with_post_sparsifier(impl, inline)
+    if impl is not None:
+        if target_sig is not None:
+            args = tuple(
+                a if isinstance(a, t) else conv.convert(a, t)
+                for a, t in zip(args, target_sig)
+            )
+        if inline_cls is not None and getattr(impl, "_sten_fused", False):
+            return impl(inline, *args, **kwargs)
+        return impl(*args, **kwargs)
+
+    # 3: dense fallback
+    fallback = dense_fn or _DENSE_OPS.get(op_name) or (op if callable(op) else None)
+    if fallback is None:
+        raise NotImplementedError(
+            f"no sparse implementation nor dense fallback for op {op_name!r} "
+            f"with signature {[c.__name__ for c in sig]}"
+        )
+    if any(isinstance(a, SparsityLayout) for a in args):
+        warnings.warn(
+            f"sten: falling back to dense implementation of {op_name!r} for "
+            f"signature {[c.__name__ for c in sig]}",
+            SparseFallbackWarning,
+            stacklevel=2,
+        )
+    dense_args = tuple(
+        a.to_dense() if isinstance(a, SparsityLayout) else a for a in args
+    )
+    out = fallback(*dense_args, **kwargs)
+    if inline is not None and not isinstance(inline, KeepAll):
+        out = inline(out)
+    return out
+
+
+def _with_post_sparsifier(impl, sparsifier):
+    def wrapped(*args, **kwargs):
+        out = impl(*args, **kwargs)
+        if sparsifier is not None and not isinstance(sparsifier, KeepAll):
+            out = sparsifier(out)
+        return out
+
+    wrapped._sten_out_layout = getattr(impl, "_sten_out_layout", None)
+    return wrapped
+
+
+# ---------------------------------------------------------------------------
+# Sparse operators: operator + output format (paper §3.3)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class OutFormat:
+    """Output format 4-tuple (paper §3.3): inline sparsifier applied inside
+    the operator, materialized in ``tmp_layout``, then the external
+    sparsifier produces ``out_layout``."""
+
+    inline: Sparsifier = KeepAll()
+    tmp_layout: type = DenseTensor
+    external: Sparsifier = KeepAll()
+    out_layout: type = DenseTensor
+
+    @classmethod
+    def coerce(cls, fmt):
+        if isinstance(fmt, OutFormat):
+            return fmt
+        return cls(*fmt)
+
+
+def sparsified_op(orig_op, out_fmt, grad_out_fmt=None,
+                  dense_fn: Optional[Callable] = None):
+    """Build a sparse operator from ``orig_op`` and output format(s) —
+    the JAX spelling of ``sten.sparsified_op``.
+
+    Single-output ops take a single OutFormat (or 4-tuple); the returned
+    callable dispatches to registered sparse implementations (with fusion of
+    the inline sparsifier when available), applies the external sparsifier,
+    and returns the final layout instance.
+
+    ``grad_out_fmt`` is recorded on the returned callable; gradient
+    sparsification in JAX happens where gradients materialize (the optimizer
+    update — see optim/sparse_update.py), since JAX cotangents mirror primal
+    pytree structure (DESIGN.md §2).
+    """
+    fmt = OutFormat.coerce(out_fmt[0] if isinstance(out_fmt, (list, tuple))
+                           and out_fmt and isinstance(out_fmt[0], (OutFormat, tuple))
+                           else out_fmt)
+
+    def op(*args, key: Optional[jax.Array] = None, **kwargs):
+        tmp = dispatch(orig_op, *args, inline=fmt.inline, dense_fn=dense_fn,
+                       **kwargs)
+        # materialize in tmp layout
+        if not isinstance(tmp, SparsityLayout):
+            tmp = conv.as_layout(tmp)
+        if fmt.tmp_layout is not None and not isinstance(tmp, fmt.tmp_layout):
+            tmp = conv.convert(tmp, fmt.tmp_layout)
+        # external sparsifier -> output layout
+        if isinstance(fmt.external, KeepAll) and isinstance(tmp, fmt.out_layout):
+            return tmp
+        return apply_sparsifier(fmt.external, tmp, fmt.out_layout, key=key)
+
+    op.grad_out_fmt = grad_out_fmt
+    op.out_fmt = fmt
+    op.__name__ = f"sparse_{_canonical_name(orig_op)}"
+    return op

@@ -1,0 +1,570 @@
+"""Sparsity layouts — the first leg of the STen programming model (paper §3.1).
+
+A *sparsity layout* augments a tensor with a storage format.  In STen-JAX every
+layout is a pytree-registered dataclass so it flows through ``jit`` / ``pjit`` /
+``grad`` / ``scan`` unchanged.  This replaces STen's PyTorch mechanism of
+wrapping custom tensors in single-element dummy tensors to satisfy the C++
+autograd core (paper §4.2) — JAX autograd is pytree-native, so no wrapper is
+needed.
+
+Unstructured formats (CSR/COO) are **capacity padded**: XLA requires static
+shapes, so ``nnz_cap`` is part of the layout metadata and the tail is
+zero-filled.  Structured formats (n:m, n:m:g) are naturally shape-static,
+which is one reason they map well to TPUs.
+
+``to_dense`` is implemented with differentiable jnp ops for every layout, so
+gradients w.r.t. the stored values flow automatically (see core/autograd.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, ClassVar
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "SparsityLayout",
+    "DenseTensor",
+    "CsrTensor",
+    "CooTensor",
+    "FixedMaskTensor",
+    "NMTensor",
+    "GroupedNMTensor",
+    "register_layout",
+    "all_layouts",
+    "nm_patterns",
+    "pad_to_multiple",
+]
+
+_LAYOUT_REGISTRY: dict[str, type] = {}
+
+
+def register_layout(cls):
+    """Class decorator: register ``cls`` as a sparsity layout and a pytree.
+
+    The class must define ``tree_flatten`` / ``tree_unflatten`` and
+    ``to_dense``.  This is the extension point the paper's §3.1 example
+    (``CscTensor``) exercises — see tests/test_extensibility.py for the
+    JAX equivalent of that example.
+    """
+    if not hasattr(cls, "to_dense"):
+        raise TypeError(f"layout {cls.__name__} must define to_dense()")
+    jax.tree_util.register_pytree_node(
+        cls, cls.tree_flatten, cls.tree_unflatten
+    )
+    _LAYOUT_REGISTRY[cls.__name__] = cls
+    return cls
+
+
+def all_layouts() -> dict[str, type]:
+    return dict(_LAYOUT_REGISTRY)
+
+
+def pad_to_multiple(x: jnp.ndarray, mult: int, axis: int) -> jnp.ndarray:
+    """Zero-pad ``x`` along ``axis`` to the next multiple of ``mult``."""
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+class SparsityLayout:
+    """Base class for sparsity layouts (informal protocol).
+
+    Required: ``to_dense() -> jnp.ndarray``, ``shape``, ``dtype``.
+    Optional: ``density()`` (fraction of stored values), ``nnz``.
+    """
+
+    #: subclasses set this; used by the dispatcher for error messages
+    layout_name: ClassVar[str] = "abstract"
+
+    @property
+    def shape(self):  # pragma: no cover - abstract
+        raise NotImplementedError
+
+    @property
+    def dtype(self):  # pragma: no cover - abstract
+        raise NotImplementedError
+
+    def to_dense(self) -> jnp.ndarray:  # pragma: no cover - abstract
+        raise NotImplementedError
+
+    # Convenience mirrors of the dense tensor API so layouts can be used
+    # in shape-polymorphic code (paper §4.4 "override the method or
+    # attribute ... with the same name as in the corresponding dense
+    # tensor").
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape))
+
+
+# ---------------------------------------------------------------------------
+# Dense (the trivial layout; KeepAll sparsifier default)
+# ---------------------------------------------------------------------------
+
+
+@register_layout
+@dataclasses.dataclass
+class DenseTensor(SparsityLayout):
+    """Trivial layout: a dense jnp array.  Exists so the dispatcher can treat
+    dense and sparse operands uniformly."""
+
+    data: jnp.ndarray
+    layout_name: ClassVar[str] = "dense"
+
+    @property
+    def shape(self):
+        return tuple(self.data.shape)
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    def to_dense(self):
+        return self.data
+
+    def density(self):
+        return 1.0
+
+    def tree_flatten(self):
+        return (self.data,), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def _as_array(x):
+    return x.to_dense() if isinstance(x, SparsityLayout) else jnp.asarray(x)
+
+
+# ---------------------------------------------------------------------------
+# CSR — capacity padded
+# ---------------------------------------------------------------------------
+
+
+@register_layout
+@dataclasses.dataclass
+class CsrTensor(SparsityLayout):
+    """Compressed Sparse Row with a static nonzero capacity.
+
+    ``data``/``indices`` have length ``nnz_cap`` (>= true nnz); padding
+    entries carry value 0 and column 0 and live past ``indptr[-1]``.
+    2-D only (matrices), like torch.sparse_csr.
+    """
+
+    data: jnp.ndarray      # [nnz_cap]
+    indices: jnp.ndarray   # [nnz_cap] int32 column ids
+    indptr: jnp.ndarray    # [rows + 1] int32
+    dense_shape: tuple     # static
+    layout_name: ClassVar[str] = "csr"
+
+    @property
+    def shape(self):
+        return tuple(self.dense_shape)
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    @property
+    def nnz_cap(self):
+        return self.data.shape[0]
+
+    def to_dense(self):
+        rows, cols = self.dense_shape
+        # row id per stored entry: count of indptr boundaries passed
+        positions = jnp.arange(self.nnz_cap)
+        row_ids = jnp.searchsorted(self.indptr, positions, side="right") - 1
+        row_ids = jnp.clip(row_ids, 0, rows - 1)
+        valid = positions < self.indptr[-1]
+        flat_idx = row_ids * cols + self.indices
+        vals = jnp.where(valid, self.data, 0)
+        out = jnp.zeros(rows * cols, self.data.dtype).at[flat_idx].add(vals)
+        return out.reshape(rows, cols)
+
+    def density(self):
+        return float(jax.device_get(self.indptr[-1])) / max(1, self.size)
+
+    @classmethod
+    def from_dense(cls, x, nnz_cap: int | None = None) -> "CsrTensor":
+        """Exact (lossless) dense->CSR conversion.  Traceable: uses a fixed
+        capacity (defaults to the true nnz rounded up to a multiple of 8,
+        computed eagerly when ``x`` is concrete)."""
+        x = _as_array(x)
+        assert x.ndim == 2, "CsrTensor is 2-D"
+        rows, cols = x.shape
+        mask = x != 0
+        nnz_per_row = jnp.sum(mask, axis=1, dtype=jnp.int32)
+        indptr = jnp.concatenate(
+            [jnp.zeros((1,), jnp.int32), jnp.cumsum(nnz_per_row, dtype=jnp.int32)]
+        )
+        if nnz_cap is None:
+            total = int(jax.device_get(indptr[-1]))
+            nnz_cap = max(8, int(math.ceil(total / 8.0)) * 8)
+        # stable sort puts nonzeros of each row first, in column order
+        order = jnp.argsort(~mask, axis=1, stable=True)
+        sorted_vals = jnp.take_along_axis(x, order, axis=1)
+        # flatten row-major, then compact valid entries to the front
+        keep = jnp.take_along_axis(mask, order, axis=1)
+        flat_vals = sorted_vals.reshape(-1)
+        flat_cols = order.reshape(-1).astype(jnp.int32)
+        flat_keep = keep.reshape(-1)
+        dest = jnp.cumsum(flat_keep) - 1
+        # dropped or beyond-capacity -> scratch slot (never clamp into data)
+        dest = jnp.where(flat_keep & (dest < nnz_cap), dest, nnz_cap)
+        data = jnp.zeros((nnz_cap + 1,), x.dtype).at[dest].set(flat_vals)[:-1]
+        indices = (
+            jnp.zeros((nnz_cap + 1,), jnp.int32).at[dest].set(flat_cols)[:-1]
+        )
+        return cls(data, indices, indptr, (rows, cols))
+
+    def tree_flatten(self):
+        return (self.data, self.indices, self.indptr), (self.dense_shape,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+
+# ---------------------------------------------------------------------------
+# COO — capacity padded
+# ---------------------------------------------------------------------------
+
+
+@register_layout
+@dataclasses.dataclass
+class CooTensor(SparsityLayout):
+    """Coordinate format with static capacity; N-dimensional."""
+
+    data: jnp.ndarray     # [nnz_cap]
+    coords: jnp.ndarray   # [ndim, nnz_cap] int32
+    dense_shape: tuple
+    layout_name: ClassVar[str] = "coo"
+
+    @property
+    def shape(self):
+        return tuple(self.dense_shape)
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    @property
+    def nnz_cap(self):
+        return self.data.shape[0]
+
+    def to_dense(self):
+        strides = np.array(
+            [int(np.prod(self.dense_shape[i + 1 :])) for i in range(len(self.dense_shape))],
+            dtype=np.int32,
+        )
+        flat_idx = jnp.sum(self.coords * strides[:, None], axis=0)
+        out = jnp.zeros(int(np.prod(self.dense_shape)), self.data.dtype)
+        out = out.at[flat_idx].add(self.data)
+        return out.reshape(self.dense_shape)
+
+    def density(self):
+        return float(jax.device_get(jnp.sum(self.data != 0))) / max(1, self.size)
+
+    @classmethod
+    def from_dense(cls, x, nnz_cap: int | None = None) -> "CooTensor":
+        x = _as_array(x)
+        flat = x.reshape(-1)
+        mask = flat != 0
+        if nnz_cap is None:
+            total = int(jax.device_get(jnp.sum(mask)))
+            nnz_cap = max(8, int(math.ceil(total / 8.0)) * 8)
+        dest = jnp.cumsum(mask) - 1
+        dest = jnp.where(mask & (dest < nnz_cap), dest, nnz_cap)
+        data = jnp.zeros((nnz_cap + 1,), x.dtype).at[dest].set(flat)[:-1]
+        flat_pos = jnp.zeros((nnz_cap + 1,), jnp.int32).at[dest].set(
+            jnp.arange(flat.shape[0], dtype=jnp.int32)
+        )[:-1]
+        coords = []
+        rem = flat_pos
+        for dim in reversed(x.shape):
+            coords.append(rem % dim)
+            rem = rem // dim
+        coords = jnp.stack(list(reversed(coords)), axis=0)
+        return cls(data, coords, tuple(x.shape))
+
+    def tree_flatten(self):
+        return (self.data, self.coords), (self.dense_shape,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+
+# ---------------------------------------------------------------------------
+# FixedMaskTensor — masked-dense emulation (the paper's training workhorse)
+# ---------------------------------------------------------------------------
+
+
+@register_layout
+@dataclasses.dataclass
+class FixedMaskTensor(SparsityLayout):
+    """Dense values + boolean mask.  The paper's §5.3 ``FixedMaskTensor``:
+    used for masked sparse training/fine-tuning where the sparsity pattern
+    changes slowly.  Offers no storage saving (by design) but preserves
+    sparsity semantics, and its fixed pattern enables the value-only
+    all-reduce fast path (dist/collectives.py).
+
+    ``origin`` (optional, static aux) records the sparsifier that produced
+    the mask so SameFormatSparsifier pattern *recomputes* use the native
+    algorithm (e.g. the n:m:g assignment) rather than generic magnitude —
+    the paper's 'new sparsification is more expensive for formats with
+    complex constraints' (Fig 9).
+    """
+
+    val: jnp.ndarray
+    mask: jnp.ndarray  # same shape, bool (or 0/1 of val dtype)
+    origin: Any = None
+    layout_name: ClassVar[str] = "fixed_mask"
+
+    @property
+    def shape(self):
+        return tuple(self.val.shape)
+
+    @property
+    def dtype(self):
+        return self.val.dtype
+
+    def to_dense(self):
+        return self.val * self.mask.astype(self.val.dtype)
+
+    def density(self):
+        return float(jax.device_get(jnp.mean(self.mask.astype(jnp.float32))))
+
+    @classmethod
+    def from_dense(cls, x) -> "FixedMaskTensor":
+        x = _as_array(x)
+        return cls(x, (x != 0))
+
+    def tree_flatten(self):
+        return (self.val, self.mask), (self.origin,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+
+# ---------------------------------------------------------------------------
+# n:m (un-grouped) — e.g. NVIDIA 2:4
+# ---------------------------------------------------------------------------
+
+
+def nm_patterns(n: int, m: int) -> np.ndarray:
+    """All C(m, n) nonzero patterns (index tuples), in *revolving-door* order
+    so adjacent patterns differ in exactly one position (paper §5.1: "the
+    nonzero pattern between adjacent groups differs in only one location, so
+    that we need save and initialize only one vector register").
+
+    Returns int32 array [C(m,n), n] of in-block offsets, each row sorted.
+    """
+    combos = _revolving_door(m, n)
+    return np.array([sorted(c) for c in combos], dtype=np.int32)
+
+
+def _revolving_door(m: int, n: int) -> list[tuple[int, ...]]:
+    """Generate n-subsets of range(m) in revolving-door Gray order."""
+    if n == 0:
+        return [()]
+    if n == m:
+        return [tuple(range(m))]
+    # Recurrence: A(m,n) = A(m-1,n) then reversed A(m-1,n-1) each + {m-1}
+    first = _revolving_door(m - 1, n)
+    second = [c + (m - 1,) for c in reversed(_revolving_door(m - 1, n - 1))]
+    return first + second
+
+
+@register_layout
+@dataclasses.dataclass
+class NMTensor(SparsityLayout):
+    """Plain n:m sparsity along the last axis: each consecutive block of m
+    elements stores exactly n values.  Shape-static: nnz == size * n / m.
+    """
+
+    val: jnp.ndarray   # [..., nblocks, n]
+    idx: jnp.ndarray   # [..., nblocks, n] int32 in-block offsets (sorted)
+    n: int
+    m: int
+    dense_shape: tuple
+    layout_name: ClassVar[str] = "nm"
+
+    @property
+    def shape(self):
+        return tuple(self.dense_shape)
+
+    @property
+    def dtype(self):
+        return self.val.dtype
+
+    def to_dense(self):
+        *lead, k = self.dense_shape
+        k_pad = self.val.shape[-2] * self.m
+        nblocks = self.val.shape[-2]
+        base = jnp.arange(nblocks, dtype=jnp.int32) * self.m  # [nblocks]
+        cols = base[:, None] + self.idx  # [..., nblocks, n]
+        flat_cols = cols.reshape(*cols.shape[:-2], -1)
+        flat_vals = self.val.reshape(*self.val.shape[:-2], -1)
+        out = jnp.zeros((*self.val.shape[:-2], k_pad), self.val.dtype)
+        out = _scatter_last(out, flat_cols, flat_vals)
+        return out[..., :k]
+
+    def density(self):
+        return self.n / self.m
+
+    @classmethod
+    def from_dense(cls, x, n: int, m: int) -> "NMTensor":
+        """Magnitude-based per-block top-n (the paper's per-block fraction
+        sparsifier, Table 1 — a *blocking* sparsifier)."""
+        x = _as_array(x)
+        k = x.shape[-1]
+        xp = pad_to_multiple(x, m, axis=-1)
+        blocks = xp.reshape(*xp.shape[:-1], -1, m)
+        _, idx = jax.lax.top_k(jnp.abs(blocks), n)
+        idx = jnp.sort(idx, axis=-1).astype(jnp.int32)
+        val = jnp.take_along_axis(blocks, idx, axis=-1)
+        return cls(val, idx, n, m, tuple(x.shape))
+
+    def tree_flatten(self):
+        return (self.val, self.idx), (self.n, self.m, self.dense_shape)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+
+def _scatter_last(out, cols, vals):
+    """Scatter ``vals`` into ``out`` along the last axis at ``cols``.
+    Batched over leading dims via vmap composition."""
+    def scat1(o, c, v):
+        return o.at[c].add(v)
+
+    fn = scat1
+    for _ in range(out.ndim - 1):
+        fn = jax.vmap(fn)
+    return fn(out, cols, vals)
+
+
+# ---------------------------------------------------------------------------
+# n:m:g — the paper's novel grouped n:m layout (§5)
+# ---------------------------------------------------------------------------
+
+
+@register_layout
+@dataclasses.dataclass
+class GroupedNMTensor(SparsityLayout):
+    """Grouped n:m (``n:m:g``) sparsity (paper §5, Fig 5).
+
+    The canonical 2-D view is ``[R, K]`` with the **sparse dim = K** (last
+    axis).  Along K, m-element blocks are collected into *chunks* of
+    ``C(m,n) * g`` blocks.  Within a chunk every nonzero pattern appears
+    exactly ``g`` times ("each nonzero pattern is repeated g times, forming a
+    group"), in the fixed revolving-door pattern order: chunk position ``p``
+    carries pattern ``p // g``.  Blocks are permuted within the chunk to
+    maximize preserved magnitude, and ``blk_idx`` records the *original*
+    m-block index at each position.  Larger g = larger chunks = more freedom
+    = energy closer to plain n:m (paper Fig 7).
+
+    TPU adaptation knob (DESIGN.md §2.1): ``gr`` shares the chunk
+    permutation across ``gr`` consecutive rows, which is what lets the MXU
+    kernel amortize its B-row gathers across a row tile.  ``gr=1`` is
+    exactly the paper's per-fiber format (the CPU/AVX kernel needs no
+    sharing); TPU configs use gr = 8..128.  The energy cost of gr > 1 is
+    measured in benchmarks/fig7_energy.py.
+
+    Storage (K padded to a multiple of m*C(m,n)*g, R to a multiple of gr):
+      val      [R_pad, nblocks, n]            compressed values, permuted order
+      blk_idx  [R_pad // gr, nchunks, C*g]    original block index per position
+    The pattern table ``nm_patterns(n, m)`` and the position->pattern map are
+    compile-time constants — the key property the TPU kernel exploits.
+    """
+
+    val: jnp.ndarray
+    blk_idx: jnp.ndarray
+    n: int
+    m: int
+    g: int
+    gr: int
+    dense_shape: tuple   # original (pre-transpose, pre-pad) shape
+    sparse_dim: int
+    layout_name: ClassVar[str] = "grouped_nm"
+
+    @property
+    def shape(self):
+        return tuple(self.dense_shape)
+
+    @property
+    def dtype(self):
+        return self.val.dtype
+
+    @property
+    def num_patterns(self):
+        return math.comb(self.m, self.n)
+
+    def density(self):
+        return self.n / self.m
+
+    def _canonical_dims(self):
+        # canonical: cols = sparse dim
+        sd = self.sparse_dim % 2
+        gd = 1 - sd
+        r, k = self.dense_shape[gd], self.dense_shape[sd]
+        return sd, gd, r, k
+
+    def to_dense(self):
+        sd, gd, r, k = self._canonical_dims()
+        pats = jnp.asarray(nm_patterns(self.n, self.m))  # [C, n]
+        C = self.num_patterns
+        CG = C * self.g
+        R_pad, nblocks, n = self.val.shape
+        nchunks = nblocks // CG
+        # in-block offsets per chunk position (static): pattern p//g
+        pos_pat = jnp.tile(jnp.repeat(pats, self.g, axis=0), (nchunks, 1))
+        # original block per (row, position): [R_pad, nblocks]
+        orig_block = self.blk_idx.reshape(R_pad // self.gr, nblocks)
+        orig_block_rows = jnp.repeat(orig_block, self.gr, axis=0)
+        cols = orig_block_rows[..., None] * self.m + pos_pat[None]  # [R_pad, nb, n]
+        flat_cols = cols.reshape(R_pad, -1)
+        flat_vals = self.val.reshape(R_pad, -1)
+        k_pad = nblocks * self.m
+        out = jnp.zeros((R_pad, k_pad), self.val.dtype)
+        out = _scatter_last(out, flat_cols, flat_vals)
+        out = out[:r, :k]
+        if sd == 0:  # sparse dim was rows -> transpose back
+            out = out.T
+        return out
+
+    def tree_flatten(self):
+        return (self.val, self.blk_idx), (
+            self.n, self.m, self.g, self.gr, self.dense_shape, self.sparse_dim,
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    @classmethod
+    def from_dense(cls, x, n: int, m: int, g: int, gr: int = 1,
+                   sparse_dim: int = -1, method: str = "greedy"
+                   ) -> "GroupedNMTensor":
+        # implemented in core/nmg.py to keep this module layout-only
+        from repro.core import nmg
+        return nmg.dense_to_grouped_nm(
+            _as_array(x), n=n, m=m, g=g, gr=gr, sparse_dim=sparse_dim,
+            method=method,
+        )

@@ -1,0 +1,290 @@
+"""Dense <-> n:m:g conversion algorithms (paper §5.2).
+
+The conversion objective: given dense X, find X_hat in n:m:g format maximizing
+``||X_hat||_1`` (the paper uses the L1 norm — equivalently the *energy*
+``||X_hat||_1 / ||X||_1`` of Fig 7).  Per chunk this is an assignment problem:
+chunk position j carries the compile-time pattern P_j, and we choose which
+original m-block sits at each position.
+
+Implemented methods (all paper-faithful):
+  * ``greedy``    — the paper's CPU algorithm: compute all C(m,n)^2 (block,
+                    pattern) scores, process them from highest to lowest,
+                    first-fit assign.  Processing in descending order with
+                    first-fit is identical to repeatedly taking the best
+                    available pair, which is how we vectorize it in XLA
+                    (a C-step fori_loop over a [batch, C, C] score tensor).
+  * ``swap``      — the paper's GPU algorithm: start from an arbitrary
+                    assignment and apply pairwise swaps while they improve
+                    the preserved magnitude.  We seed it with ``greedy`` and
+                    run it as a bounded while_loop, so it is always >= greedy.
+  * ``exact``     — brute force over all C! permutations (tests only, C<=6),
+                    used as the optimality oracle for property tests.
+
+These run as XLA programs, so the "performance critical" conversion after
+each optimizer update (paper §5.2) is jit-compatible and fuses into the
+training step.  kernels/nm_mask.py provides the Pallas fast path for the
+fixed-pattern case.
+"""
+
+from __future__ import annotations
+
+import itertools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.layouts import (
+    GroupedNMTensor,
+    NMTensor,
+    nm_patterns,
+    pad_to_multiple,
+)
+
+__all__ = [
+    "dense_to_grouped_nm",
+    "grouped_nm_to_dense",
+    "energy",
+    "nm_mask",
+    "unstructured_mask",
+    "blocked_mask",
+    "grouped_nm_mask",
+]
+
+
+def energy(x_hat, x) -> jnp.ndarray:
+    """Paper §6.1: energy = ||X_hat||_1 / ||X||_1, in [0, 1]."""
+    num = jnp.sum(jnp.abs(x_hat))
+    den = jnp.sum(jnp.abs(x))
+    return num / jnp.maximum(den, jnp.finfo(jnp.float32).tiny)
+
+
+# ---------------------------------------------------------------------------
+# Mask constructors for the comparison sparsities of Fig 7
+# ---------------------------------------------------------------------------
+
+
+def unstructured_mask(x, sparsity: float) -> jnp.ndarray:
+    """Global magnitude top-k mask (scalar fraction sparsifier, Table 1)."""
+    flat = jnp.abs(x).reshape(-1)
+    k = max(1, int(round(flat.shape[0] * (1.0 - sparsity))))
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return (jnp.abs(x) >= thresh).astype(x.dtype)
+
+
+def nm_mask(x, n: int, m: int) -> jnp.ndarray:
+    """Per-block top-n mask along the last axis (per-block fraction)."""
+    k = x.shape[-1]
+    xp = pad_to_multiple(x, m, axis=-1)
+    blocks = xp.reshape(*xp.shape[:-1], -1, m)
+    _, idx = jax.lax.top_k(jnp.abs(blocks), n)
+    onehot = jnp.sum(jax.nn.one_hot(idx, m, dtype=x.dtype), axis=-2)
+    mask = onehot.reshape(*xp.shape[:-1], -1)[..., :k]
+    return mask
+
+
+def blocked_mask(x, block: int, sparsity: float) -> jnp.ndarray:
+    """Block-wise fraction sparsifier (Table 1): drop whole blocks of
+    ``block`` consecutive elements (last axis) with smallest L1."""
+    k = x.shape[-1]
+    xp = pad_to_multiple(x, block, axis=-1)
+    blocks = jnp.abs(xp).reshape(*xp.shape[:-1], -1, block)
+    scores = jnp.sum(blocks, axis=-1).reshape(-1)
+    keep = max(1, int(round(scores.shape[0] * (1.0 - sparsity))))
+    thresh = jax.lax.top_k(scores, keep)[0][-1]
+    bmask = (jnp.sum(blocks, axis=-1) >= thresh).astype(x.dtype)
+    mask = jnp.repeat(bmask, block, axis=-1)
+    mask = mask.reshape(*xp.shape[:-1], -1)[..., :k]
+    return mask
+
+
+# ---------------------------------------------------------------------------
+# n:m:g assignment
+# ---------------------------------------------------------------------------
+
+
+def _greedy_assign(scores: jnp.ndarray, g: int) -> jnp.ndarray:
+    """Paper's CPU algorithm (§5.2): the C(m,n)^2*g (block, pattern) scores
+    are processed from highest to lowest; a block takes a pattern only if the
+    block is still unassigned and the pattern's group is not yet full
+    (capacity g).  Descending-order first-fit == iterated global argmax,
+    which is how we vectorize it: CG fori_loop steps over [B, CG, C] scores.
+
+    scores: [B, CG, C] (block, pattern) -> perm [B, CG] int32 mapping chunk
+    position p (pattern p // g) to the original block index placed there.
+    """
+    B, CG, C = scores.shape
+    NEG = jnp.asarray(-jnp.inf, scores.dtype)
+    bidx = jnp.arange(B)
+
+    def body(_, state):
+        sc, perm, cap = state
+        flat = sc.reshape(B, CG * C)
+        best = jnp.argmax(flat, axis=1)
+        b, p = best // C, best % C
+        # next free slot of pattern p: positions p*g .. p*g + g-1
+        slot = p * g + (g - cap[bidx, p])
+        perm = perm.at[bidx, slot].set(b.astype(jnp.int32))
+        cap = cap.at[bidx, p].add(-1)
+        sc = sc.at[bidx, b, :].set(NEG)                     # block taken
+        full = cap[bidx, p] == 0
+        sc = jnp.where(full[:, None, None],
+                       sc.at[bidx, :, p].set(NEG), sc)      # pattern full
+        return sc, perm, cap
+
+    perm0 = jnp.full((B, CG), -1, jnp.int32)
+    cap0 = jnp.full((B, C), g, jnp.int32)
+    _, perm, _ = jax.lax.fori_loop(0, CG, body, (scores, perm0, cap0))
+    return perm
+
+
+def _swap_refine(scores: jnp.ndarray, perm: jnp.ndarray, g: int,
+                 max_iters: int = 128) -> jnp.ndarray:
+    """Paper's GPU algorithm (§5.2): attempt to exchange nonzero patterns
+    between chunk positions while the swap improves the preserved magnitude.
+    Vectorized: each iteration applies the single best positive swap per
+    chunk; terminates when no chunk improves (bounded by ``max_iters``)."""
+    B, CG, C = scores.shape
+    bidx = jnp.arange(B)
+    # expand pattern scores to positions: spos[b, blk, pos] = scores[b, blk, pos//g]
+    spos = jnp.repeat(scores, g, axis=2)  # [B, CG, CG]
+
+    def gain_and_best(perm):
+        cur = spos[bidx[:, None], perm, jnp.arange(CG)[None]]  # [B, CG]
+        cross_ij = spos[
+            bidx[:, None, None], perm[:, None, :], jnp.arange(CG)[None, :, None]
+        ]  # cross_ij[b, i, j] = spos[b, perm[b, j], i]
+        delta = (
+            cross_ij
+            + jnp.swapaxes(cross_ij, 1, 2)
+            - cur[:, :, None]
+            - cur[:, None, :]
+        )
+        delta = jnp.where(jnp.eye(CG, dtype=bool)[None], -jnp.inf, delta)
+        flat = delta.reshape(B, CG * CG)
+        best = jnp.argmax(flat, axis=1)
+        return flat[bidx, best], best // CG, best % CG
+
+    def cond(state):
+        it, perm, improved = state
+        return jnp.logical_and(it < max_iters, improved)
+
+    def body(state):
+        it, perm, _ = state
+        gn, i, j = gain_and_best(perm)
+        do = gn > 1e-12
+        pi = perm[bidx, i]
+        pj = perm[bidx, j]
+        new_perm = perm.at[bidx, i].set(jnp.where(do, pj, pi))
+        new_perm = new_perm.at[bidx, j].set(jnp.where(do, pi, pj))
+        return it + 1, new_perm, jnp.any(do)
+
+    _, perm, _ = jax.lax.while_loop(
+        cond, body, (jnp.asarray(0), perm, jnp.asarray(True))
+    )
+    return perm
+
+
+def _exact_assign(scores: np.ndarray, g: int) -> np.ndarray:
+    """Brute-force optimal assignment (oracle for tests; CG <= 8)."""
+    B, CG, C = scores.shape
+    best = np.zeros((B, CG), np.int32)
+    for b in range(B):
+        best_cost, best_perm = -np.inf, None
+        for p in itertools.permutations(range(CG)):
+            cost = sum(scores[b, blk, pos // g] for pos, blk in enumerate(p))
+            if cost > best_cost:
+                best_cost, best_perm = cost, p
+        best[b] = np.array(best_perm, np.int32)
+    return best
+
+
+def dense_to_grouped_nm(x, n: int, m: int, g: int, gr: int = 1,
+                        sparse_dim: int = -1, method: str = "greedy"
+                        ) -> GroupedNMTensor:
+    """Convert dense 2-D ``x`` to n:m:g (paper §5.2).
+
+    ``sparse_dim`` selects the axis carrying the n:m structure (chunks of
+    C(m,n)*g m-blocks along it).  ``gr`` (TPU adaptation) shares chunk
+    permutations across ``gr`` consecutive fibers; gr=1 is the paper's
+    format.
+    """
+    x = jnp.asarray(x)
+    assert x.ndim == 2, "n:m:g conversion operates on matrices"
+    sd = sparse_dim % 2
+    orig_shape = tuple(x.shape)
+    xc = x.T if sd == 0 else x  # canonical [R, K(sparse)]
+    R, K = xc.shape
+    C = math.comb(m, n)
+    CG = C * g
+    xp = pad_to_multiple(pad_to_multiple(xc, gr, 0), m * CG, 1)
+    R_pad, K_pad = xp.shape
+    Gr, nchunks = R_pad // gr, K_pad // (m * CG)
+    pats_np = nm_patterns(n, m)
+    pat_onehot = jnp.zeros((C, m), xp.dtype).at[
+        jnp.repeat(jnp.arange(C), n), pats_np.reshape(-1)
+    ].set(1.0)
+
+    # per-(fiber-group, chunk, block) magnitudes: [Gr, nchunks, CG, m]
+    mags = jnp.abs(xp).reshape(Gr, gr, nchunks, CG, m).sum(axis=1)
+    # scores[b, blk, pat] = sum_l mags[b, blk, P[pat, l]]
+    scores = jnp.einsum("bkm,pm->bkp", mags.reshape(Gr * nchunks, CG, m),
+                        pat_onehot)
+
+    if method == "greedy":
+        perm = _greedy_assign(scores, g)
+    elif method == "swap":
+        perm = _swap_refine(scores, _greedy_assign(scores, g), g)
+    elif method == "exact":
+        perm = jnp.asarray(
+            _exact_assign(np.asarray(jax.device_get(scores)), g)
+        )
+    else:
+        raise ValueError(f"unknown n:m:g conversion method {method!r}")
+
+    perm = perm.reshape(Gr, nchunks, CG)  # local block index per position
+    chunk_base = (jnp.arange(nchunks, dtype=jnp.int32) * CG)[None, :, None]
+    blk_idx = perm + chunk_base  # global m-block index, [Gr, nchunks, CG]
+
+    # gather values: val[r, c*CG + p, l] = xp[r, blk_idx[r//gr, c, p]*m
+    #                                          + P[p//g, l]]
+    pats = jnp.asarray(pats_np)  # [C, n]
+    pos_pat = jnp.repeat(pats, g, axis=0)  # [CG, n]
+    cols = blk_idx[..., None] * m + pos_pat[None, None]  # [Gr, nc, CG, n]
+    cols_rows = jnp.repeat(
+        cols.reshape(Gr, nchunks * CG * n), gr, axis=0
+    )  # [R_pad, nblocks*n]
+    flat_vals = jnp.take_along_axis(xp, cols_rows, axis=1)
+    val = flat_vals.reshape(R_pad, nchunks * CG, n)
+
+    return GroupedNMTensor(
+        val=val,
+        blk_idx=blk_idx,
+        n=n,
+        m=m,
+        g=g,
+        gr=gr,
+        dense_shape=orig_shape,
+        sparse_dim=sd,
+    )
+
+
+def grouped_nm_to_dense(t: GroupedNMTensor) -> jnp.ndarray:
+    """Paper §5.2: n:m:g -> dense is a single pass reordering by the stored
+    index (implemented as the layout's differentiable to_dense)."""
+    return t.to_dense()
+
+
+def grouped_nm_mask(x, n: int, m: int, g: int, gr: int = 1,
+                    sparse_dim: int = -1, method: str = "greedy"
+                    ) -> jnp.ndarray:
+    """Boolean mask of the entries an n:m:g conversion would keep.  Used for
+    masked training (FixedMaskTensor) and the Fig 7 energy comparison."""
+    t = dense_to_grouped_nm(x, n, m, g, gr=gr, sparse_dim=sparse_dim,
+                            method=method)
+    ones = GroupedNMTensor(
+        val=jnp.ones_like(t.val), blk_idx=t.blk_idx, n=t.n, m=t.m, g=t.g,
+        gr=t.gr, dense_shape=t.dense_shape, sparse_dim=t.sparse_dim,
+    )
+    return ones.to_dense().astype(x.dtype)

@@ -1,0 +1,219 @@
+"""Built-in sparse operator implementations (paper §4.4: STen ships support
+for common operators — here matmul/linear/add and friends — registered with
+the dispatcher; everything else reaches the dense fallback with a warning).
+
+All implementations are differentiable jnp compositions: gradients w.r.t. the
+stored values of any layout flow through ``to_dense``/gathers automatically,
+which is how STen-JAX gets the paper's "backpropagation is transparently
+supported" for free (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+import importlib
+
+# import the module object directly (the package re-exports a function named
+# ``dispatch``, which would shadow the submodule on attribute-style imports)
+disp = importlib.import_module("repro.core.dispatch")
+from repro.core.layouts import (
+    CooTensor,
+    CsrTensor,
+    DenseTensor,
+    FixedMaskTensor,
+    GroupedNMTensor,
+    NMTensor,
+    SparsityLayout,
+)
+from repro.core.sparsifiers import ScalarThresholdSparsifier
+
+__all__ = ["matmul", "add", "linear", "relu", "gelu", "sum_"]
+
+# ---------------------------------------------------------------------------
+# dense references (fallback targets)
+# ---------------------------------------------------------------------------
+
+disp.register_dense_reference("matmul", jnp.matmul)
+disp.register_dense_reference("add", jnp.add)
+disp.register_dense_reference("relu", jax.nn.relu)
+disp.register_dense_reference("gelu", jax.nn.gelu)
+disp.register_dense_reference("sum", jnp.sum)
+disp.register_dense_reference(
+    "linear", lambda x, w, b=None: jnp.matmul(x, w) + (0 if b is None else b)
+)
+
+
+# ---------------------------------------------------------------------------
+# CSR implementations (torch.sparse-equivalent basics)
+# ---------------------------------------------------------------------------
+
+
+@disp.register_op_impl("matmul", inp=(CsrTensor, DenseTensor), out=DenseTensor)
+def _csr_dense_mm(a: CsrTensor, b):
+    """CSR[M,K] @ dense[K,N] via gather + segment-sum over stored entries."""
+    b = b.to_dense() if isinstance(b, SparsityLayout) else jnp.asarray(b)
+    rows, cols = a.shape
+    positions = jnp.arange(a.nnz_cap)
+    row_ids = jnp.clip(
+        jnp.searchsorted(a.indptr, positions, side="right") - 1, 0, rows - 1
+    )
+    valid = positions < a.indptr[-1]
+    contrib = jnp.where(valid, a.data, 0)[:, None] * jnp.take(b, a.indices, axis=0)
+    out = jax.ops.segment_sum(contrib, row_ids, num_segments=rows)
+    return out
+
+
+@disp.register_op_impl("matmul", inp=(DenseTensor, CsrTensor), out=DenseTensor)
+def _dense_csr_mm(a, b: CsrTensor):
+    """dense[M,K] @ CSR[K,N]: scatter columns of the sparse operand."""
+    a = a.to_dense() if isinstance(a, SparsityLayout) else jnp.asarray(a)
+    rows, cols = b.shape
+    positions = jnp.arange(b.nnz_cap)
+    row_ids = jnp.clip(
+        jnp.searchsorted(b.indptr, positions, side="right") - 1, 0, rows - 1
+    )
+    valid = positions < b.indptr[-1]
+    vals = jnp.where(valid, b.data, 0)
+    # out[:, c] += a[:, r] * v  for each stored (r, c, v)
+    gathered = jnp.take(a, row_ids, axis=1) * vals[None, :]  # [M, nnz]
+    out = jnp.zeros((a.shape[0], cols), gathered.dtype)
+    return out.at[:, b.indices].add(gathered)
+
+
+@disp.register_op_impl("add", inp=(CooTensor, CooTensor), out=CooTensor)
+def _coo_add(a: CooTensor, b: CooTensor):
+    """Keep-all sparse add: nonzero union via coordinate concatenation
+    (paper §3.3: 'the sum of two sparse tensors with a keep-all sparsifier
+    produces ... the union of the nonzeros of the inputs')."""
+    assert a.shape == b.shape
+    data = jnp.concatenate([a.data, b.data])
+    coords = jnp.concatenate([a.coords, b.coords], axis=1)
+    return CooTensor(data, coords, a.shape)
+
+
+# ---------------------------------------------------------------------------
+# Masked-dense implementations (training workhorse)
+# ---------------------------------------------------------------------------
+
+
+@disp.register_op_impl("matmul", inp=(DenseTensor, FixedMaskTensor),
+                       out=DenseTensor)
+def _dense_masked_mm(a, w: FixedMaskTensor):
+    a = a.to_dense() if isinstance(a, SparsityLayout) else jnp.asarray(a)
+    return jnp.matmul(a, w.to_dense())
+
+
+@disp.register_op_impl("matmul", inp=(FixedMaskTensor, DenseTensor),
+                       out=DenseTensor)
+def _masked_dense_mm(a: FixedMaskTensor, b):
+    b = b.to_dense() if isinstance(b, SparsityLayout) else jnp.asarray(b)
+    return jnp.matmul(a.to_dense(), b)
+
+
+@disp.register_op_impl("linear", inp=(DenseTensor, FixedMaskTensor),
+                       out=DenseTensor)
+def _linear_masked(x, w: FixedMaskTensor, b=None):
+    x = x.to_dense() if isinstance(x, SparsityLayout) else jnp.asarray(x)
+    y = jnp.matmul(x, w.to_dense())
+    return y if b is None else y + b
+
+
+# ---------------------------------------------------------------------------
+# n:m:g implementations (the paper's §5 fast path)
+# ---------------------------------------------------------------------------
+
+
+@disp.register_op_impl("matmul", inp=(GroupedNMTensor, DenseTensor),
+                       out=DenseTensor)
+def _nmg_dense_mm(a: GroupedNMTensor, b):
+    from repro.kernels import ops as kops
+
+    b = b.to_dense() if isinstance(b, SparsityLayout) else jnp.asarray(b)
+    if a.sparse_dim % 2 != 1:
+        raise NotImplementedError(
+            "GroupedNM matmul needs sparse_dim=1 on the left operand; "
+            "store the weight transposed or use 'linear'."
+        )
+    return kops.nmg_spmm(a, b)
+
+
+@disp.register_op_impl("linear", inp=(DenseTensor, GroupedNMTensor),
+                       out=DenseTensor)
+def _linear_nmg(x, w: GroupedNMTensor, b=None):
+    from repro.kernels import ops as kops
+
+    x = x.to_dense() if isinstance(x, SparsityLayout) else jnp.asarray(x)
+    if w.sparse_dim % 2 != 0:
+        raise NotImplementedError(
+            "n:m:g linear expects the weight sparse along its input axis "
+            "(sparse_dim=0) with groups along the output axis."
+        )
+    y = kops.nmg_linear(x, w)
+    return y if b is None else y + b
+
+
+@disp.register_op_impl("matmul", inp=(NMTensor, DenseTensor), out=DenseTensor)
+def _nm_dense_mm(a: NMTensor, b):
+    """Plain n:m (last-axis sparse) matmul: gather B rows per block."""
+    b = b.to_dense() if isinstance(b, SparsityLayout) else jnp.asarray(b)
+    M, K = a.shape
+    nblocks = a.val.shape[-2]
+    base = jnp.arange(nblocks, dtype=jnp.int32) * a.m
+    cols = (base[:, None] + a.idx).reshape(M, -1)       # [M, nb*n]
+    K_pad = nblocks * a.m
+    b_p = jnp.pad(b, ((0, K_pad - K), (0, 0)))
+    gathered = jnp.take(b_p, cols.reshape(-1), axis=0).reshape(M, -1, b.shape[1])
+    vals = a.val.reshape(M, -1)
+    return jnp.einsum("mk,mkn->mn", vals.astype(jnp.float32),
+                      gathered.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Fused inline-sparsifier implementation (paper §3.3 streaming fusion)
+# ---------------------------------------------------------------------------
+
+
+@disp.register_op_impl("matmul", inp=(DenseTensor, DenseTensor),
+                       out=FixedMaskTensor, inline=ScalarThresholdSparsifier)
+def _fused_matmul_threshold(sparsifier, a, b):
+    from repro.kernels import ops as kops
+
+    a = a.to_dense() if isinstance(a, SparsityLayout) else jnp.asarray(a)
+    b = b.to_dense() if isinstance(b, SparsityLayout) else jnp.asarray(b)
+    val, mask = kops.matmul_threshold(a, b, float(sparsifier.threshold))
+    return FixedMaskTensor(val, mask)
+
+
+_fused_matmul_threshold._sten_fused = True
+
+
+# ---------------------------------------------------------------------------
+# Public functional API (sten.* ops)
+# ---------------------------------------------------------------------------
+
+
+def matmul(a, b, **kw):
+    return disp.dispatch("matmul", a, b, **kw)
+
+
+def add(a, b, **kw):
+    return disp.dispatch("add", a, b, **kw)
+
+
+def linear(x, w, b=None, **kw):
+    # bias passes as a keyword so the 2-operand layout signature matches
+    return disp.dispatch("linear", x, w, b=b, **kw)
+
+
+def relu(x, **kw):
+    return disp.dispatch("relu", x, **kw)
+
+
+def gelu(x, **kw):
+    return disp.dispatch("gelu", x, **kw)
+
+
+def sum_(x, **kw):
+    return disp.dispatch("sum", x, **kw)

@@ -1,0 +1,399 @@
+"""Sparsifiers — the third leg of the STen programming model (paper §3.3).
+
+A sparsifier decides which output values of an operator to keep.  Following
+Table 1 of the paper they are classified by how much data they need before
+they can produce output:
+
+  * **streaming**      1 pass, O(1) memory   (keep-all, random fraction,
+                       scalar threshold) — candidates for inlining into
+                       operators (see kernels/fused_sparse_matmul.py).
+  * **blocking**       2 passes, O(b) memory (per-block fraction = n:m,
+                       grouped n:m) — candidates for inlining.
+  * **materializing**  2 passes, O(nnz)      (scalar fraction = magnitude,
+                       block-wise fraction, complex weight sparsifiers).
+
+Every sparsifier exposes its semantic core as ``mask(x, key=None)``; layout-
+specific implementations are registered in a global registry keyed by
+``(sparsifier class, input layout, output layout)`` — the JAX analogue of
+``sten.register_sparsifier_implementation``.  Unregistered combinations fall
+back to mask + lossless conversion, mirroring STen's dense fallback.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import nmg
+from repro.core.layouts import (
+    CooTensor,
+    CsrTensor,
+    DenseTensor,
+    FixedMaskTensor,
+    GroupedNMTensor,
+    NMTensor,
+    SparsityLayout,
+)
+
+__all__ = [
+    "Sparsifier",
+    "KeepAll",
+    "RandomFractionSparsifier",
+    "ScalarThresholdSparsifier",
+    "NMSparsifier",
+    "GroupedNMSparsifier",
+    "ScalarFractionSparsifier",
+    "BlockwiseFractionSparsifier",
+    "SameFormatSparsifier",
+    "register_sparsifier_implementation",
+    "apply_sparsifier",
+    "lookup_sparsifier_impl",
+]
+
+STREAMING = "streaming"
+BLOCKING = "blocking"
+MATERIALIZING = "materializing"
+
+
+class Sparsifier:
+    """Base class.  ``kind`` is the Table-1 classification; ``passes`` the
+    number of passes over the tensor it requires."""
+
+    kind = STREAMING
+    passes = 1
+
+    def mask(self, x: jnp.ndarray, key: Optional[jax.Array] = None):
+        raise NotImplementedError
+
+    def __call__(self, x, key=None):
+        """Default action: dense in, masked dense out."""
+        x = x.to_dense() if isinstance(x, SparsityLayout) else jnp.asarray(x)
+        return x * self.mask(x, key).astype(x.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class KeepAll(Sparsifier):
+    """Trivial sparsifier: keeps every produced value (paper Table 1).  The
+    default for dense tensors, and the identity 'inline sparsifier' in an
+    output format tuple."""
+
+    kind = STREAMING
+    passes = 1
+
+    def mask(self, x, key=None):
+        return jnp.ones_like(x, dtype=jnp.bool_)
+
+
+@dataclasses.dataclass(frozen=True)
+class RandomFractionSparsifier(Sparsifier):
+    """Drop values with probability ``fraction`` (dropout-style)."""
+
+    fraction: float = 0.5
+    kind = STREAMING
+    passes = 1
+
+    def mask(self, x, key=None):
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        return jax.random.uniform(key, x.shape) >= self.fraction
+
+
+@dataclasses.dataclass(frozen=True)
+class ScalarThresholdSparsifier(Sparsifier):
+    """Keep |x| >= threshold (ReLU-style streaming selection)."""
+
+    threshold: float = 0.0
+    kind = STREAMING
+    passes = 1
+
+    def mask(self, x, key=None):
+        return jnp.abs(x) >= self.threshold
+
+
+@dataclasses.dataclass(frozen=True)
+class NMSparsifier(Sparsifier):
+    """Per-block fraction (Table 1): keep the top-n of each m-block along the
+    last axis — plain n:m sparsity [NVIDIA A100; Zhou et al.]."""
+
+    n: int = 2
+    m: int = 4
+    kind = BLOCKING
+    passes = 2
+
+    def mask(self, x, key=None):
+        return nmg.nm_mask(x, self.n, self.m).astype(jnp.bool_)
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupedNMSparsifier(Sparsifier):
+    """The paper's n:m:g sparsifier (§5.2).  ``gr`` is the TPU row-sharing
+    width (gr=1 == the paper's per-fiber format; see DESIGN.md §2.1)."""
+
+    n: int = 2
+    m: int = 4
+    g: int = 16
+    gr: int = 1
+    method: str = "greedy"
+    sparse_dim: int = -1   # weights stored [K, N] use 0 (the input axis)
+    kind = BLOCKING
+    passes = 2
+
+    def mask(self, x, key=None):
+        fn = lambda xx: nmg.grouped_nm_mask(  # noqa: E731
+            xx, self.n, self.m, self.g, gr=self.gr,
+            sparse_dim=self.sparse_dim, method=self.method,
+        ).astype(jnp.bool_)
+        if x.ndim == 3:  # scan-stacked [L, ...] weights: per-layer masks
+            return jax.vmap(fn)(x)
+        return fn(x)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScalarFractionSparsifier(Sparsifier):
+    """Magnitude pruning (Table 1, materializing): keep the top
+    (1 - fraction) of values by |x| globally over the tensor."""
+
+    fraction: float = 0.5
+    kind = MATERIALIZING
+    passes = 2
+
+    def mask(self, x, key=None):
+        return nmg.unstructured_mask(x, self.fraction).astype(jnp.bool_)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockwiseFractionSparsifier(Sparsifier):
+    """Block-wise fraction (Table 1): drop whole blocks with the smallest
+    combined magnitude (filter/block pruning)."""
+
+    fraction: float = 0.5
+    block: int = 4
+    kind = MATERIALIZING
+    passes = 2
+
+    def mask(self, x, key=None):
+        return nmg.blocked_mask(x, self.block, self.fraction).astype(jnp.bool_)
+
+
+@dataclasses.dataclass(frozen=True)
+class SameFormatSparsifier(Sparsifier):
+    """Re-sparsify a new (dense) value into the same format as a reference
+    sparse tensor (paper §4: applied after optimizer updates since functional
+    updates produce a new tensor).
+
+    ``fixed_pattern=True`` reuses the reference's nonzero pattern (the cheap
+    path that dominates training — paper Fig 9 'fixed sparsification');
+    ``False`` recomputes the pattern with the layout's native sparsifier
+    ('new sparsification').
+    """
+
+    fixed_pattern: bool = True
+    kind = BLOCKING
+    passes = 1
+
+    def resparsify(self, ref, new_dense: jnp.ndarray):
+        new_dense = (
+            new_dense.to_dense()
+            if isinstance(new_dense, SparsityLayout)
+            else jnp.asarray(new_dense)
+        )
+        if isinstance(ref, FixedMaskTensor):
+            if self.fixed_pattern:
+                return FixedMaskTensor(new_dense * ref.mask, ref.mask,
+                                       ref.origin)
+            if ref.origin is not None:
+                # native recompute (e.g. the n:m:g assignment — Fig 9's
+                # 'new sparsification' for complex formats)
+                mask = ref.origin.mask(new_dense)
+                return FixedMaskTensor(new_dense * mask, mask, ref.origin)
+            # generic: recompute at the reference's density via magnitude
+            # ranks (traceable even with data-dependent nnz)
+            k = jnp.sum(ref.mask.astype(jnp.int32))
+            flat = jnp.abs(new_dense).reshape(-1)
+            order = jnp.argsort(-flat)
+            ranks = jnp.zeros_like(order).at[order].set(
+                jnp.arange(order.shape[0]))
+            mask = (ranks < k).reshape(new_dense.shape)
+            return FixedMaskTensor(new_dense * mask, mask)
+        if isinstance(ref, GroupedNMTensor):
+            if self.fixed_pattern:
+                return _regather_grouped_nm(ref, new_dense)
+            return nmg.dense_to_grouped_nm(
+                new_dense, n=ref.n, m=ref.m, g=ref.g, gr=ref.gr,
+                sparse_dim=ref.sparse_dim,
+            )
+        if isinstance(ref, NMTensor):
+            if self.fixed_pattern:
+                return _regather_nm(ref, new_dense)
+            return NMTensor.from_dense(new_dense, ref.n, ref.m)
+        if isinstance(ref, CsrTensor):
+            if self.fixed_pattern:
+                rows, cols = ref.shape
+                positions = jnp.arange(ref.nnz_cap)
+                row_ids = jnp.clip(
+                    jnp.searchsorted(ref.indptr, positions, side="right") - 1,
+                    0, rows - 1,
+                )
+                valid = positions < ref.indptr[-1]
+                data = jnp.where(valid, new_dense[row_ids, ref.indices], 0)
+                return CsrTensor(data.astype(ref.dtype), ref.indices,
+                                 ref.indptr, ref.dense_shape)
+            return CsrTensor.from_dense(new_dense, nnz_cap=ref.nnz_cap)
+        if isinstance(ref, CooTensor):
+            if self.fixed_pattern:
+                data = new_dense[tuple(ref.coords)]
+                # padding slots (coord origin + stored zero) stay zero
+                pad = (ref.coords.sum(0) == 0) & (ref.data == 0)
+                data = jnp.where(pad, 0, data)
+                return CooTensor(data.astype(ref.dtype), ref.coords,
+                                 ref.dense_shape)
+            return CooTensor.from_dense(new_dense, nnz_cap=ref.nnz_cap)
+        if isinstance(ref, DenseTensor):
+            return DenseTensor(new_dense)
+        raise TypeError(f"SameFormatSparsifier: unsupported ref {type(ref)}")
+
+
+def _regather_nm(ref: NMTensor, dense: jnp.ndarray) -> NMTensor:
+    from repro.core.layouts import pad_to_multiple
+
+    xp = pad_to_multiple(dense, ref.m, axis=-1)
+    blocks = xp.reshape(*xp.shape[:-1], -1, ref.m)
+    val = jnp.take_along_axis(blocks, ref.idx, axis=-1)
+    return NMTensor(val, ref.idx, ref.n, ref.m, ref.dense_shape)
+
+
+def _regather_grouped_nm(ref: GroupedNMTensor, dense: jnp.ndarray
+                         ) -> GroupedNMTensor:
+    """Fixed-pattern re-gather: keep blk_idx, re-read values from ``dense``.
+    This is the fast path used after most optimizer steps."""
+    import math as _math
+
+    from repro.core.layouts import nm_patterns, pad_to_multiple
+
+    sd = ref.sparse_dim % 2
+    xc = dense.T if sd == 0 else dense
+    C = _math.comb(ref.m, ref.n)
+    CG = C * ref.g
+    xp = pad_to_multiple(pad_to_multiple(xc, ref.gr, 0), ref.m * CG, 1)
+    R_pad = xp.shape[0]
+    Gr, nchunks, _ = ref.blk_idx.shape
+    pats = jnp.asarray(nm_patterns(ref.n, ref.m))
+    pos_pat = jnp.repeat(pats, ref.g, axis=0)  # [CG, n]
+    cols = ref.blk_idx[..., None] * ref.m + pos_pat[None, None]  # [Gr,nc,CG,n]
+    cols_rows = jnp.repeat(cols.reshape(Gr, -1), ref.gr, axis=0)
+    val = jnp.take_along_axis(xp, cols_rows, axis=1).reshape(
+        R_pad, nchunks * CG, ref.n
+    )
+    return GroupedNMTensor(
+        val=val, blk_idx=ref.blk_idx, n=ref.n, m=ref.m, g=ref.g, gr=ref.gr,
+        dense_shape=ref.dense_shape, sparse_dim=ref.sparse_dim,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Sparsifier implementation registry (paper §3.3 / §4.3)
+# ---------------------------------------------------------------------------
+
+_SPARSIFIER_IMPLS: dict[tuple, Callable] = {}
+
+
+def register_sparsifier_implementation(sparsifier: type, inp: type, out: type):
+    """Decorator mirroring ``sten.register_sparsifier_implementation``.
+
+    The implementation signature is ``fn(sparsifier, tensor, key=None)`` and
+    must return an instance of ``out``.
+    """
+
+    def deco(fn):
+        keyt = (sparsifier, inp, out)
+        if keyt in _SPARSIFIER_IMPLS:
+            raise ValueError(f"duplicate sparsifier impl for {keyt}")
+        _SPARSIFIER_IMPLS[keyt] = fn
+        return fn
+
+    return deco
+
+
+def lookup_sparsifier_impl(sparsifier, inp_cls, out_cls):
+    return _SPARSIFIER_IMPLS.get((type(sparsifier), inp_cls, out_cls))
+
+
+def apply_sparsifier(sparsifier: Sparsifier, x, out_layout: type = DenseTensor,
+                     key: Optional[jax.Array] = None):
+    """Apply ``sparsifier`` to ``x`` producing ``out_layout``.
+
+    Lookup order (paper §4.4 fallback semantics):
+      1. registered (sparsifier, layout(x), out_layout) implementation;
+      2. registered (sparsifier, DenseTensor, out_layout) after densifying;
+      3. generic fallback: mask in dense space, then lossless conversion
+         to the requested output layout.
+    """
+    inp_cls = type(x) if isinstance(x, SparsityLayout) else DenseTensor
+    impl = lookup_sparsifier_impl(sparsifier, inp_cls, out_layout)
+    if impl is not None:
+        return impl(sparsifier, x, key=key)
+    if inp_cls is not DenseTensor:
+        impl = lookup_sparsifier_impl(sparsifier, DenseTensor, out_layout)
+        if impl is not None:
+            return impl(sparsifier, DenseTensor(x.to_dense()), key=key)
+    # generic fallback
+    dense = x.to_dense() if isinstance(x, SparsityLayout) else jnp.asarray(x)
+    if isinstance(sparsifier, KeepAll):
+        masked, mask = dense, jnp.ones_like(dense, jnp.bool_)
+    else:
+        mask = sparsifier.mask(dense, key)
+        masked = dense * mask.astype(dense.dtype)
+    return _dense_to_layout(masked, mask, out_layout, sparsifier)
+
+
+def _dense_to_layout(masked, mask, out_layout, sparsifier):
+    if out_layout in (DenseTensor, jnp.ndarray, None):
+        return DenseTensor(masked)
+    if out_layout is FixedMaskTensor:
+        return FixedMaskTensor(masked, mask, origin=sparsifier)
+    if out_layout is CsrTensor:
+        return CsrTensor.from_dense(masked)
+    if out_layout is CooTensor:
+        return CooTensor.from_dense(masked)
+    if out_layout is NMTensor:
+        n, m = getattr(sparsifier, "n", 2), getattr(sparsifier, "m", 4)
+        return NMTensor.from_dense(masked, n, m)
+    if out_layout is GroupedNMTensor:
+        n = getattr(sparsifier, "n", 2)
+        m = getattr(sparsifier, "m", 4)
+        g = getattr(sparsifier, "g", 16)
+        gr = getattr(sparsifier, "gr", 1)
+        return nmg.dense_to_grouped_nm(masked, n=n, m=m, g=g, gr=gr)
+    raise TypeError(f"no conversion path to layout {out_layout}")
+
+
+# -- native (non-fallback) implementations for the structured formats -------
+
+
+@register_sparsifier_implementation(NMSparsifier, DenseTensor, NMTensor)
+def _dense_to_nm(sp: NMSparsifier, x, key=None):
+    return NMTensor.from_dense(x.to_dense() if isinstance(x, SparsityLayout) else x,
+                               sp.n, sp.m)
+
+
+@register_sparsifier_implementation(GroupedNMSparsifier, DenseTensor,
+                                    GroupedNMTensor)
+def _dense_to_grouped_nm_impl(sp: GroupedNMSparsifier, x, key=None):
+    return nmg.dense_to_grouped_nm(
+        x.to_dense() if isinstance(x, SparsityLayout) else x,
+        n=sp.n, m=sp.m, g=sp.g, gr=sp.gr, sparse_dim=sp.sparse_dim,
+        method=sp.method,
+    )
+
+
+@register_sparsifier_implementation(GroupedNMSparsifier, DenseTensor,
+                                    FixedMaskTensor)
+def _dense_to_fixed_mask_grouped_nm(sp: GroupedNMSparsifier, x, key=None):
+    """Masked-dense n:m:g — the training-time representation (paper §5.3)."""
+    dense = x.to_dense() if isinstance(x, SparsityLayout) else jnp.asarray(x)
+    mask = nmg.grouped_nm_mask(dense, sp.n, sp.m, sp.g, gr=sp.gr,
+                               sparse_dim=sp.sparse_dim, method=sp.method)
+    return FixedMaskTensor(dense * mask, mask.astype(jnp.bool_), origin=sp)

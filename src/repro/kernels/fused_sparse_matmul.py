@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: dense matmul with a fused *streaming* sparsifier
+epilogue (paper §3.3: "streaming sparsifiers could be fused into their
+associated operator").
+
+This is the kernel-level realization of STen's inline-sparsifier concept:
+``C = A @ B`` is tiled on the MXU, and in the epilogue of the final K-step a
+scalar-threshold streaming sparsifier is applied *in registers*, emitting the
+masked values and the keep-mask in a single pass — the dense intermediate is
+never materialized in HBM.  (The dispatcher uses this via the ``inline=``
+fusion hook; see core/dispatch.py.)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["matmul_threshold_pallas"]
+
+
+def _kernel(a_ref, b_ref, oval_ref, omask_ref, *, threshold, k_steps):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        oval_ref[...] = jnp.zeros_like(oval_ref)
+
+    oval_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(ki == k_steps - 1)
+    def _epilogue():
+        y = oval_ref[...]
+        mask = (jnp.abs(y) >= threshold).astype(jnp.float32)
+        oval_ref[...] = y * mask
+        omask_ref[...] = mask
+
+    @pl.when(ki < k_steps - 1)
+    def _keep_mask_defined():
+        omask_ref[...] = jnp.zeros_like(omask_ref)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("threshold", "tm", "tn", "tk", "interpret")
+)
+def matmul_threshold_pallas(a, b, *, threshold: float, tm: int = 128,
+                            tn: int = 128, tk: int = 128,
+                            interpret: bool = True):
+    """(A @ B) with fused scalar-threshold sparsifier.
+
+    Returns (masked f32 values [M, N], f32 0/1 keep mask [M, N]).
+    """
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2
+    a_p = jnp.pad(a, (((0, (-M) % tm), (0, (-K) % tk))))
+    b_p = jnp.pad(b, (((0, (-K) % tk), (0, (-N) % tn))))
+    Mp, Kp = a_p.shape
+    Np = b_p.shape[1]
+    k_steps = Kp // tk
+
+    val, mask = pl.pallas_call(
+        functools.partial(_kernel, threshold=threshold, k_steps=k_steps),
+        grid=(Mp // tm, Np // tn, k_steps),
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tk, tn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tm, tn), lambda i, j, k: (i, j)),
+            pl.BlockSpec((tm, tn), lambda i, j, k: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+            jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+        ],
+        interpret=interpret,
+    )(a_p, b_p)
+    return val[:M, :N], mask[:M, :N]

@@ -1,0 +1,124 @@
+"""Pallas TPU kernel for n:m:g sparse-dense GEMM (paper §5.1, Fig 6 —
+re-architected for the MXU; see DESIGN.md §2.1).
+
+Computes ``C[R, N] = A @ B`` where A is the canonical [R, K(sparse)] view of
+a :class:`GroupedNMTensor` and B is dense [K, N].
+
+TPU adaptation of the paper's AVX microkernel:
+
+* The CPU kernel broadcasts each sparse value into a vector register and
+  indirectly loads B rows (Fig 6 steps 1-4), one A-row at a time.  The MXU
+  instead wants dense matmuls, so the format carries a row-sharing width
+  ``gr`` (the chunk permutation is shared by ``gr`` consecutive A rows) and
+  the kernel **packs gathered B rows into a deep contraction**: for each
+  chunk it gathers batches of ~128 compressed B rows and issues
+  ``(gr × depth) @ (depth × TN)`` MXU matmuls against the contiguous
+  compressed-value tile.  ``gr`` >= 8 (sublane) makes the gathers amortize;
+  the paper's CPU format is the special case gr=1 (kernel still correct,
+  MXU poorly utilized — use the XLA path there).
+* Chunks fix the pattern order (paper: kernels "avoid branches based on the
+  sparsity structure"): chunk position p carries pattern ``p // g``, a
+  compile-time constant, so every gather is a *dynamic-base, static-offset*
+  row slice.  The only runtime data is the m-block permutation ``blk_idx``,
+  which lives in SMEM — the TPU analogue of the paper's index loads.
+* The revolving-door pattern order (adjacent patterns differ in one offset)
+  maximizes row reuse between consecutive gathers, mirroring the paper's
+  "save and initialize only one vector register".
+
+Grid: ``(R_pad/gr, N/TN, nchunks)`` with the chunk (K) dimension innermost so
+the output tile is revisited and accumulated in f32.
+
+VMEM working set per grid step (bf16, TN=256, gr=128, 2:4:16 => CG=96):
+  val tile   gr × CG×n × 2B          =  48 KiB
+  B tile     CG×m × TN × 2B          = 192 KiB
+  out tile   gr × TN × 4B            = 128 KiB
+comfortably inside the ~16 MiB v5e VMEM budget.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.layouts import GroupedNMTensor, nm_patterns
+
+__all__ = ["nmg_spmm_pallas"]
+
+
+def _kernel(idx_ref, val_ref, b_ref, o_ref, *, n, m, g, gr, CG, pats,
+            batch_positions):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    vals = val_ref[...].reshape(gr, CG * n)  # contiguous compressed tile
+
+    # iterate chunk positions in sub-batches sized to pack ~128-deep matmuls
+    for start in range(0, CG, batch_positions):
+        stop = min(start + batch_positions, CG)
+        rows = []
+        for p in range(start, stop):  # static unroll; pattern p//g static
+            b_loc = idx_ref[0, 0, p] - ki * CG  # dynamic m-block base
+            mrows = b_ref[pl.ds(b_loc * m, m), :]  # one dynamic row-slice
+            rows.extend(mrows[l : l + 1, :] for l in pats[p // g])
+        gathered = jnp.concatenate(rows, axis=0)  # ((stop-start)*n, TN)
+        o_ref[...] += jnp.dot(
+            vals[:, start * n : stop * n],
+            gathered.astype(vals.dtype),
+            preferred_element_type=jnp.float32,
+        )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tn", "interpret", "target_depth")
+)
+def nmg_spmm_pallas(a: GroupedNMTensor, b: jnp.ndarray, *, tn: int = 128,
+                    interpret: bool = True, target_depth: int = 128
+                    ) -> jnp.ndarray:
+    """C = A_canonical @ B via the Pallas kernel.  Returns f32 [R, N]."""
+    n, m, g, gr = a.n, a.m, a.g, a.gr
+    C = math.comb(m, n)
+    CG = C * g
+    pats = [tuple(int(v) for v in row) for row in nm_patterns(n, m)]
+
+    val, blk_idx = a.val, a.blk_idx
+    R_pad, nblocks, _ = val.shape
+    Gr, nchunks, _ = blk_idx.shape
+    K_pad = nblocks * m
+
+    # pad B to the compressed K extent and a TN multiple of columns
+    K, N = b.shape
+    b_p = jnp.pad(b, ((0, K_pad - K), (0, (-N) % tn)))
+    N_pad = b_p.shape[1]
+
+    batch_positions = max(1, target_depth // n)
+    grid = (Gr, N_pad // tn, nchunks)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, n=n, m=m, g=g, gr=gr, CG=CG, pats=pats,
+            batch_positions=batch_positions,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, CG), lambda gi, ni, ki: (gi, ki, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((gr, CG, n), lambda gi, ni, ki: (gi, ki, 0)),
+            pl.BlockSpec((CG * m, tn), lambda gi, ni, ki: (ki, ni)),
+        ],
+        out_specs=pl.BlockSpec((gr, tn), lambda gi, ni, ki: (gi, ni)),
+        out_shape=jax.ShapeDtypeStruct((R_pad, N_pad), jnp.float32),
+        interpret=interpret,
+    )(blk_idx, val, b_p)
+
+    # crop row padding (canonical row count) and column padding
+    sd = a.sparse_dim % 2
+    R = a.dense_shape[1 - sd]
+    return out[:R, :N]

@@ -1,0 +1,125 @@
+"""Public jit'd entry points for the sparsity kernels.
+
+Each op picks the Pallas kernel on TPU and interpret-mode (or a pure-XLA
+production path) on CPU, pads/crops shapes, and exposes a layout-level API
+that core/ops.py registers with the dispatcher.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.layouts import GroupedNMTensor, nm_patterns
+from repro.kernels import ref as kref
+from repro.kernels.fused_sparse_matmul import matmul_threshold_pallas
+from repro.kernels.nm_mask import nm_mask_pallas
+from repro.kernels.nmg_spmm import nmg_spmm_pallas
+
+__all__ = [
+    "on_tpu",
+    "nmg_spmm",
+    "nmg_spmm_xla",
+    "nmg_linear",
+    "nm_mask",
+    "matmul_threshold",
+]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def nmg_spmm(a: GroupedNMTensor, b: jnp.ndarray, *, use_pallas: bool | None = None
+             ) -> jnp.ndarray:
+    """C = A_canonical[R, K] @ B[K, N] (f32).
+
+    Pallas kernel on TPU (interpret-mode validation on CPU via tests);
+    the gather-based XLA path otherwise.
+    """
+    if use_pallas is None:
+        use_pallas = on_tpu()
+    if use_pallas:
+        return nmg_spmm_pallas(a, b, interpret=not on_tpu())
+    return nmg_spmm_xla(a, b)
+
+
+@jax.jit
+def nmg_spmm_xla(a: GroupedNMTensor, b: jnp.ndarray) -> jnp.ndarray:
+    """Pure-XLA production path for CPU: scan over fiber-groups, gathering
+    the compressed B rows per group and running one dense matmul per group.
+    Memory-safe (peak extra = one gathered [K*n/m, N] block per group)."""
+    n, m, g, gr = a.n, a.m, a.g, a.gr
+    val, blk_idx = a.val, a.blk_idx           # [R_pad, nb, n], [Gr, nc, CG]
+    R_pad, nblocks, _ = val.shape
+    Gr = blk_idx.shape[0]
+    K_pad = nblocks * m
+    K, N = b.shape
+    b_p = jnp.pad(b, ((0, K_pad - K), (0, 0)))
+
+    pats = jnp.asarray(nm_patterns(n, m))     # [C, n]
+    pos_pat = jnp.repeat(pats, g, axis=0)     # [CG, n]: pattern of position
+    nchunks = blk_idx.shape[1]
+    # compressed B-row index per (fiber-group, position, l): [Gr, nb*n]
+    cols = blk_idx[..., None] * m + pos_pat[None, None]
+    cols = cols.reshape(Gr, nblocks * n)
+    val_g = val.reshape(Gr, gr, nblocks * n)
+
+    def per_group(carry, xs):
+        cols_g, vals_g = xs
+        bg = jnp.take(b_p, cols_g, axis=0)    # [nb*n, N]
+        return carry, jnp.dot(
+            vals_g.astype(jnp.float32), bg.astype(jnp.float32)
+        )
+
+    _, out = jax.lax.scan(per_group, None, (cols, val_g))  # [Gr, gr, N]
+    out = out.reshape(R_pad, N)
+    sd = a.sparse_dim % 2
+    R = a.dense_shape[1 - sd]
+    return out[:R]
+
+
+def nmg_linear(x: jnp.ndarray, w: GroupedNMTensor, *,
+               use_pallas: bool | None = None) -> jnp.ndarray:
+    """y = x @ W for an n:m:g weight W stored with sparse_dim = input axis
+    (K) and groups along the output axis (N) — the serving fast path
+    (paper §5.3: 'our sparse-dense GEMM kernel during inference').
+
+    x: [..., K]  ->  y: [..., N].  Internally computes
+    (W_canonical[N, K] @ x^T)^T with the spmm kernel.
+    """
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    xt = x.reshape(-1, K).T                      # [K, M]
+    yt = nmg_spmm(w, xt, use_pallas=use_pallas)  # [N, M]
+    y = yt.T.reshape(*lead, -1)
+    return y.astype(x.dtype)
+
+
+def nm_mask(x: jnp.ndarray, n: int, m: int, *, use_pallas: bool | None = None
+            ) -> jnp.ndarray:
+    """Boolean per-m-block top-n keep mask along the last axis."""
+    if use_pallas is None:
+        use_pallas = on_tpu()
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    if use_pallas:
+        mask = nm_mask_pallas(x2, n, m, interpret=not on_tpu())
+        return mask.astype(jnp.bool_).reshape(shape)
+    return kref.nm_mask_ref(x2, n, m).reshape(shape)
+
+
+def matmul_threshold(a, b, threshold: float, *, use_pallas: bool | None = None):
+    """Matmul with fused streaming threshold sparsifier.
+    Returns (masked values, bool mask)."""
+    if use_pallas is None:
+        use_pallas = on_tpu()
+    if use_pallas:
+        val, mask = matmul_threshold_pallas(
+            a, b, threshold=threshold, interpret=not on_tpu()
+        )
+        return val, mask.astype(jnp.bool_)
+    val, mask = kref.matmul_threshold_ref(a, b, threshold)
+    return val, mask

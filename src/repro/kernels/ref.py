@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each kernel's tests sweep shapes/dtypes and assert_allclose against these.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import nmg
+from repro.core.layouts import GroupedNMTensor
+
+__all__ = ["nmg_spmm_ref", "nm_mask_ref", "matmul_threshold_ref"]
+
+
+def nmg_spmm_ref(a: GroupedNMTensor, b: jnp.ndarray) -> jnp.ndarray:
+    """C = A_canonical @ B where A_canonical is the [R(group), K(sparse)]
+    view of the n:m:g tensor (densify-then-matmul oracle)."""
+    dense = a.to_dense()
+    if a.sparse_dim % 2 == 0:  # canonical view is the transpose
+        dense = dense.T
+    return jnp.dot(dense.astype(jnp.float32), b.astype(jnp.float32))
+
+
+def nm_mask_ref(x: jnp.ndarray, n: int, m: int) -> jnp.ndarray:
+    """Per-m-block top-n keep mask along the last axis (ties -> lowest
+    index, matching jax.lax.top_k)."""
+    return nmg.nm_mask(x, n, m).astype(jnp.bool_)
+
+
+def matmul_threshold_ref(a, b, threshold: float):
+    """Dense matmul followed by a scalar-threshold streaming sparsifier:
+    returns (masked values, keep mask)."""
+    y = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32))
+    mask = jnp.abs(y) >= threshold
+    return y * mask, mask

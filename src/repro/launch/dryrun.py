@@ -1,0 +1,318 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (assignment §MULTI-POD DRY-RUN).
+
+Lowers + compiles every (architecture x input-shape) cell against the
+production mesh — 16x16 single-pod and 2x16x16 multi-pod — with
+jax.ShapeDtypeStruct inputs (no allocation), then records
+``compiled.memory_analysis()``, ``compiled.cost_analysis()`` and the
+collective-operand bytes parsed from the post-SPMD HLO into a JSON per cell.
+
+NOTE the XLA_FLAGS line above MUST precede every other import (jax locks the
+device count at first init); do not set it globally.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen1.5-4b --shape train_4k \
+        [--multi-pod] [--out experiments/dryrun] [--opt <name>=<val> ...]
+    python -m repro.launch.dryrun --all [--multi-pod]
+"""
+
+import argparse
+import functools
+import json
+import math
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_arch, input_specs
+from repro.configs.registry import runnable_cells, skip_reason
+from repro.dist.sharding import ShardingRules, param_specs, tree_shardings
+from repro.launch import steps as steps_mod
+from repro.launch.hlo_analysis import analyze_hlo, roofline_terms
+from repro.launch.mesh import make_production_mesh
+from repro.models import init_cache, init_lm
+from repro.models.common import ModelConfig
+from repro.optim import AdamWConfig, adamw_init
+
+
+def count_params(shapes_tree) -> int:
+    return sum(
+        int(math.prod(l.shape))
+        for l in jax.tree_util.tree_leaves(shapes_tree)
+        if hasattr(l, "shape")
+    )
+
+
+def model_flops(cfg: ModelConfig, shape, n_params: int) -> float:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference), with N = active
+    params for MoE (experts scaled by top_k / num_experts)."""
+    # embedding params excluded from N (standard convention)
+    emb = cfg.vocab * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    n = n_params - emb
+    if cfg.moe is not None:
+        e, k = cfg.moe.num_experts, cfg.moe.top_k
+        # expert weights exactly: wi [E, D, (2)F] + wo [E, F, D] per layer
+        f = cfg.moe.d_expert
+        per_layer = e * (cfg.d_model * (2 * f if cfg.gated_mlp else f)
+                         + f * cfg.d_model)
+        expert_p = cfg.n_layers * per_layer
+        n_active = n - expert_p + expert_p * (k / e)
+    else:
+        n_active = n
+    tokens = shape.global_batch * (1 if shape.kind == "decode" else shape.seq_len)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def build_cell(arch: str, shape_name: str, multi_pod: bool,
+               opts: dict):
+    cfg = get_arch(arch)
+    # model-execution overrides (hillclimb knobs)
+    cfg_over = {}
+    for k in ("attn_chunk_q", "attn_chunk_k"):
+        if k in opts:
+            cfg_over[k] = int(opts[k])
+    if "attn_dtype" in opts:
+        cfg_over["attn_dtype"] = opts["attn_dtype"]
+    if "attn_chunk" in opts:
+        cfg_over["attn_chunk_q"] = cfg_over["attn_chunk_k"] = \
+            int(opts["attn_chunk"])
+    if "dtype" in opts:
+        cfg_over["dtype"] = opts["dtype"]
+    if "kv_cache_dtype" in opts:
+        cfg_over["kv_cache_dtype"] = opts["kv_cache_dtype"]
+    if cfg.moe is not None and ("moe_combine" in opts or "moe_impl" in opts):
+        import dataclasses as _dc
+        moe_over = {}
+        if "moe_combine" in opts:
+            moe_over["combine"] = opts["moe_combine"]
+        if "moe_impl" in opts:
+            moe_over["impl"] = opts["moe_impl"]
+        cfg_over["moe"] = _dc.replace(cfg.moe, **moe_over)
+    if cfg.ssm is not None and ("ssm_chunk" in opts or "ssm_dtype" in opts):
+        import dataclasses as _dc
+        ssm_over = {}
+        if "ssm_chunk" in opts:
+            ssm_over["chunk"] = int(opts["ssm_chunk"])
+        if "ssm_dtype" in opts:
+            ssm_over["acc_dtype"] = opts["ssm_dtype"]
+        cfg_over["ssm"] = _dc.replace(cfg.ssm, **ssm_over)
+    if cfg_over:
+        cfg = cfg.scaled(**cfg_over)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = ShardingRules(**{k: v for k, v in opts.items()
+                             if k in ShardingRules.__dataclass_fields__})
+    step_cfg = steps_mod.StepConfig(
+        remat=opts.get("remat", "full"),
+        kv_cache_dtype=opts.get("kv_cache_dtype"),
+    )
+
+    key = jax.random.PRNGKey(0)
+    p_shapes = jax.eval_shape(functools.partial(init_lm, cfg=cfg), key)
+    if opts.get("sparse"):
+        # integrate the paper's technique into the lowered program:
+        #   masked  -> FixedMaskTensor n:m:g weights (paper-faithful
+        #              masked sparse training, Figs 2/9)
+        #   nmg     -> GroupedNMTensor compressed weights (beyond-paper:
+        #              compressed storage/optimizer/collectives)
+        from repro.core.builder import SparsityBuilder
+        from repro.core.layouts import FixedMaskTensor, GroupedNMTensor
+        from repro.core.sparsifiers import GroupedNMSparsifier
+
+        mode = opts["sparse"]
+        n_, m_, g_ = (int(v) for v in opts.get("nm", "2:4:16").split(":"))
+        sp = GroupedNMSparsifier(n_, m_, g_, gr=int(opts.get("gr", 8)),
+                                 sparse_dim=0)
+        layout = FixedMaskTensor if mode == "masked" else GroupedNMTensor
+
+        def sparsify(p):
+            sb = SparsityBuilder()
+            sb.set_weight("*mlp.w*", sp, layout)
+            sb.set_weight("*attn.wq", sp, layout)
+            sb.set_weight("*attn.wo", sp, layout)
+            return sb.sparsify_params(p)
+
+        p_shapes = jax.eval_shape(sparsify, p_shapes)
+    p_spec = param_specs(p_shapes, rules, mesh)
+    p_sh = tree_shardings(p_spec, mesh)
+    specs = input_specs(cfg, shape)
+    b_spec = steps_mod.batch_specs(specs, mesh, rules)
+    b_sh = {k: NamedSharding(mesh, s) for k, s in b_spec.items()}
+
+    if shape.kind == "train":
+        opt_shapes = jax.eval_shape(adamw_init, p_shapes)
+        o_spec = steps_mod.opt_specs(p_spec)
+        # None moment leaves (int metadata) -> replicated placeholder spec
+        def fix(spec_leaf, shape_leaf):
+            return spec_leaf
+        o_sh = {
+            "mu": tree_shardings(o_spec["mu"], mesh),
+            "nu": tree_shardings(o_spec["nu"], mesh),
+            "step": NamedSharding(mesh, P()),
+        }
+        opt = AdamWConfig()
+        fn = steps_mod.make_train_step(cfg, opt, step_cfg, mesh, rules)
+        jfn = jax.jit(
+            fn,
+            in_shardings=(p_sh, o_sh, b_sh),
+            out_shardings=(p_sh, o_sh, None),
+            donate_argnums=(0, 1),
+        )
+        args = (p_shapes, opt_shapes, specs)
+    elif shape.kind == "prefill":
+        fn = steps_mod.make_prefill_step(cfg, step_cfg, mesh, rules,
+                                         cache_len=shape.seq_len)
+        jfn = jax.jit(fn, in_shardings=(p_sh, b_sh), out_shardings=None)
+        args = (p_shapes, specs)
+    else:  # decode
+        B = shape.global_batch
+        enc_len = 1500 if cfg.n_enc_layers > 0 else 0
+        cache_shapes = jax.eval_shape(
+            functools.partial(init_cache, cfg, B, shape.seq_len,
+                              enc_len=enc_len)
+        )
+        c_spec = steps_mod.cache_specs(cache_shapes, mesh, rules)
+        c_sh = tree_shardings(c_spec, mesh)
+        fn = steps_mod.make_decode_step(cfg, step_cfg, mesh, rules)
+        jfn = jax.jit(
+            fn,
+            in_shardings=(p_sh, c_sh, b_sh["token"], None),
+            out_shardings=(None, c_sh),
+            donate_argnums=(1,),
+        )
+        args = (p_shapes, cache_shapes, specs["token"],
+                jax.ShapeDtypeStruct((), jnp.int32))
+
+    return cfg, shape, mesh, jfn, args, p_shapes
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             opts: dict, tag: str = "baseline") -> dict:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "tag": tag,
+           "opts": {k: str(v) for k, v in opts.items()}, "ok": False}
+    reason = skip_reason(arch, shape_name)
+    if reason:
+        rec["skipped"] = reason
+        _write(rec, out_dir)
+        return rec
+    t0 = time.time()
+    try:
+        cfg, shape, mesh, jfn, args, p_shapes = build_cell(
+            arch, shape_name, multi_pod, opts
+        )
+        with mesh:
+            lowered = jfn.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+        struct = analyze_hlo(hlo)
+        coll = struct["collectives"]
+        n_chips = math.prod(mesh.devices.shape)
+        n_params = count_params(p_shapes)
+        # structural (trip-count-aware) per-device costs; raw XLA
+        # cost_analysis kept for reference (it counts while bodies once)
+        flops_dev = float(struct["flops"])
+        bytes_dev = float(struct["bytes"])
+        terms = roofline_terms(flops_dev, bytes_dev, float(coll["total"]))
+        mf = model_flops(cfg, shape, n_params)
+        rec.update({
+            "ok": True,
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "chips": n_chips,
+            "n_params": n_params,
+            "flops_per_dev": flops_dev,
+            "bytes_per_dev": bytes_dev,
+            "flops_per_dev_xla_raw": float(cost.get("flops", 0.0)),
+            "bytes_per_dev_xla_raw": float(cost.get("bytes accessed", 0.0)),
+            "num_whiles": struct["num_whiles"],
+            "max_trip": struct["max_trip"],
+            "collective_bytes_per_dev": coll,
+            "memory_analysis": {
+                "argument_size": getattr(mem, "argument_size_in_bytes", None),
+                "output_size": getattr(mem, "output_size_in_bytes", None),
+                "temp_size": getattr(mem, "temp_size_in_bytes", None),
+                "generated_code_size": getattr(
+                    mem, "generated_code_size_in_bytes", None),
+                "peak": getattr(mem, "peak_memory_in_bytes", None),
+                "repr": str(mem),
+            },
+            "roofline": {
+                "compute_s": terms.compute_s,
+                "memory_s": terms.memory_s,
+                "collective_s": terms.collective_s,
+                "dominant": terms.dominant,
+            },
+            "model_flops_total": mf,
+            "model_flops_per_dev": mf / n_chips,
+            "useful_flops_ratio": (mf / n_chips) / max(flops_dev, 1.0),
+            "hlo_bytes_len": len(hlo),
+        })
+    except Exception as e:  # record the failure — these are bugs to fix
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["wall_s"] = round(time.time() - t0, 2)
+    _write(rec, out_dir)
+    return rec
+
+
+def _write(rec, out_dir):
+    p = pathlib.Path(out_dir)
+    p.mkdir(parents=True, exist_ok=True)
+    name = f"{rec['arch']}_{rec['shape']}_{rec['mesh']}"
+    if rec.get("tag") and rec["tag"] != "baseline":
+        name += f"_{rec['tag']}"
+    (p / (name.replace("/", "-") + ".json")).write_text(
+        json.dumps(rec, indent=1, default=str)
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--opt", action="append", default=[],
+                    help="hillclimb option name=value (e.g. remat=none)")
+    args = ap.parse_args()
+
+    opts = {}
+    for kv in args.opt:
+        k, v = kv.split("=", 1)
+        opts[k] = None if v == "None" else v
+
+    if args.all:
+        for arch, shape, reason in runnable_cells():
+            rec = run_cell(arch, shape, args.multi_pod, args.out, opts,
+                           args.tag)
+            status = ("SKIP: " + reason) if reason else \
+                ("ok" if rec.get("ok") else "FAIL: " + rec.get("error", "?"))
+            print(f"{arch:22s} {shape:12s} {rec['mesh']:8s} {status}",
+                  flush=True)
+    else:
+        rec = run_cell(args.arch, args.shape, args.multi_pod, args.out, opts,
+                       args.tag)
+        print(json.dumps({k: v for k, v in rec.items()
+                          if k not in ("traceback", "hlo")}, indent=1,
+                         default=str))
+        if not rec.get("ok") and not rec.get("skipped"):
+            print(rec.get("traceback", ""))
+            raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Production mesh construction (assignment spec).
+
+``make_production_mesh`` is a function (not a module-level constant) so that
+importing this module never touches jax device state.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod ("data", "model"); 2 pods = 512 chips
+    multi-pod ("pod", "data", "model")."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (host) devices exist — used by tests and
+    the weak-scaling benchmark (which spawn subprocesses with
+    ``--xla_force_host_platform_device_count``)."""
+    return jax.make_mesh((data, model), ("data", "model"))

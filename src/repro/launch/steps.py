@@ -1,0 +1,160 @@
+"""Step functions (train / prefill / decode) and their sharding assembly.
+
+These are the programs the multi-pod dry-run lowers and the training loop
+executes.  Sparsity (the paper's technique) enters through the params tree:
+any weight may be a sparse layout, gradients may be sparsified per the
+builder's grad formats, and the sparse-aware update re-sparsifies after the
+dense optimizer math (SameFormatSparsifier).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.dist.sharding import (
+    ShardingRules,
+    batch_spec,
+    param_specs,
+    tree_shardings,
+    use_rules,
+)
+from repro.models import decode_step, init_cache, init_lm, loss_fn, prefill
+from repro.models.common import ModelConfig
+from repro.optim import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    sparse_aware_update,
+    value_and_grad_sparse,
+)
+
+__all__ = ["StepConfig", "make_train_step", "make_prefill_step",
+           "make_decode_step", "cache_specs", "opt_specs", "batch_specs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class StepConfig:
+    remat: str = "full"            # none | full
+    aux_weight: float = 0.01
+    kv_cache_dtype: Optional[str] = None  # e.g. "int8" (hillclimb knob)
+    grad_formats: Optional[dict] = None
+    recompute_pattern: bool = False
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamWConfig, step_cfg: StepConfig,
+                    mesh: Mesh, rules: ShardingRules):
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def train_step(params, opt_state, batch):
+        with use_rules(mesh, rules):
+            (loss, aux), grads = value_and_grad_sparse(
+                lambda p: loss_fn(p, cfg, batch, remat=step_cfg.remat,
+                                  aux_weight=step_cfg.aux_weight),
+                has_aux=True,
+            )(params)
+            new_params, new_state, m = sparse_aware_update(
+                functools.partial(adamw_update, cfg=opt),
+                grads, opt_state, params,
+                grad_formats=step_cfg.grad_formats,
+                recompute_pattern=step_cfg.recompute_pattern,
+            )
+        metrics = {"loss": loss, "ce": aux["ce"], "moe_aux": aux["moe_aux"],
+                   "gnorm": m["gnorm"]}
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, step_cfg: StepConfig, mesh: Mesh,
+                      rules: ShardingRules, cache_len: int):
+    def prefill_step(params, batch):
+        with use_rules(mesh, rules):
+            logits, cache = prefill(
+                params, cfg, batch["tokens"], cache_len=cache_len,
+                enc_embeds=batch.get("enc_embeds"),
+                prefix_embeds=batch.get("prefix_embeds"),
+            )
+        return logits, cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, step_cfg: StepConfig, mesh: Mesh,
+                     rules: ShardingRules):
+    def decode(params, cache, token, pos):
+        with use_rules(mesh, rules):
+            logits, new_cache = decode_step(params, cfg, token, cache, pos)
+        return logits, new_cache
+
+    return decode
+
+
+# ---------------------------------------------------------------------------
+# sharding assembly
+# ---------------------------------------------------------------------------
+
+
+def opt_specs(p_specs):
+    """Optimizer-state specs mirror param specs (ZeRO-3); the step counter
+    is replicated.  Moment leaves are None for non-inexact params."""
+    return {
+        "mu": p_specs,
+        "nu": p_specs,
+        "step": P(),
+    }
+
+
+def _divisible(total: int, mesh: Mesh, axes) -> bool:
+    if axes is None:
+        return True
+    axes = axes if isinstance(axes, tuple) else (axes,)
+    k = 1
+    for a in axes:
+        k *= mesh.shape[a]
+    return total % k == 0
+
+
+def cache_specs(cache_shapes, mesh: Mesh, rules: ShardingRules):
+    """Decode-cache specs: batch over the DP axes, *sequence over the TP
+    ('model') axis* — sequence-sharded KV cache, the standard way to fit
+    multi-hundred-GB caches (XLA inserts the partial-softmax collectives).
+    SSM states shard heads over 'model' when divisible."""
+    dp = rules.resolve("batch", set(mesh.axis_names))
+    tp = rules.resolve("heads", set(mesh.axis_names))
+
+    def visit(path, leaf):
+        dims = [None] * leaf.ndim
+        # leaves: [L, B, S, ...] seq caches; [L, B, H, P, N] ssm; [L,B,W,C]
+        name = "/".join(str(getattr(p, "key", p)) for p in path)
+        if leaf.ndim >= 3:
+            if _divisible(leaf.shape[1], mesh, dp):
+                dims[1] = dp
+            if "conv" in name or "ssm" in name:
+                # no seq axis; shard the widest trailing dim over TP
+                for ax in range(leaf.ndim - 1, 1, -1):
+                    if _divisible(leaf.shape[ax], mesh, tp):
+                        dims[ax] = tp
+                        break
+            elif leaf.ndim >= 3 and _divisible(leaf.shape[2], mesh, tp):
+                dims[2] = tp  # sequence axis
+        return P(*dims)
+
+    return jax.tree_util.tree_map_with_path(visit, cache_shapes)
+
+
+def batch_specs(specs: dict, mesh: Mesh, rules: ShardingRules):
+    dp = rules.resolve("batch", set(mesh.axis_names))
+
+    out = {}
+    for k, v in specs.items():
+        dims = [None] * len(v.shape)
+        if len(v.shape) >= 1 and _divisible(v.shape[0], mesh, dp):
+            dims[0] = dp
+        out[k] = P(*dims)
+    return out

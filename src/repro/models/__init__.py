@@ -1,0 +1,10 @@
+from repro.models.common import MLAConfig, ModelConfig, MoEConfig, SSMConfig
+from repro.models.transformer import (
+    decode_step,
+    forward,
+    init_cache,
+    init_lm,
+    logits_of,
+    loss_fn,
+    prefill,
+)

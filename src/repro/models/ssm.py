@@ -1,0 +1,190 @@
+"""Mamba2 / SSD (state-space duality) blocks [arXiv:2405.21060].
+
+Chunked SSD: intra-chunk terms are computed as (decay-weighted) quadratic
+attention-like einsums; inter-chunk state is carried by a lax.scan — the
+standard O(S * Q) formulation (chunk size Q), which is what makes the
+``long_500k`` decode/prefill cells feasible (constant-size recurrent state).
+
+Decode is the O(1)-per-token recurrence over ``ssm_state`` [B, H, P, N] and a
+rolling depthwise-conv window.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, SSMConfig, dense_init, mm
+
+__all__ = ["init_ssm", "apply_ssm", "decode_ssm", "init_ssm_state"]
+
+
+def _rms_gated(x, z, w, eps=1e-6):
+    x = x * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def init_ssm(key, cfg: ModelConfig):
+    s: SSMConfig = cfg.ssm
+    D = cfg.d_model
+    di = s.d_inner(D)
+    H = s.num_heads(D)
+    N = s.state_dim
+    conv_dim = di + 2 * N
+    ks = jax.random.split(key, 4)
+    return {
+        # in_proj packs [z(di), x(di), B(N), C(N), dt(H)]
+        "in_proj": dense_init(ks[0], (D, 2 * di + 2 * N + H), cfg.jdtype),
+        "conv_w": dense_init(ks[1], (s.conv_width, conv_dim), cfg.jdtype,
+                             scale=0.5),
+        "conv_b": jnp.zeros((conv_dim,), cfg.jdtype),
+        "a_log": jnp.zeros((H,), jnp.float32),
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm_w": jnp.ones((di,), cfg.jdtype),
+        "out_proj": dense_init(ks[3], (di, D), cfg.jdtype),
+    }
+
+
+def _split_proj(proj, di, N, H):
+    z = proj[..., :di]
+    xs = proj[..., di : 2 * di]
+    B_ = proj[..., 2 * di : 2 * di + N]
+    C_ = proj[..., 2 * di + N : 2 * di + 2 * N]
+    dt = proj[..., 2 * di + 2 * N :]
+    return z, xs, B_, C_, dt
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv: x [B, S, C], w [W, C]."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(W)
+    )
+    return out + b
+
+
+def apply_ssm(p, x, cfg: ModelConfig, return_state: bool = False):
+    """x: [B, S, D] -> [B, S, D] (full-sequence / prefill path).
+    With ``return_state`` also returns the decode state after position S-1
+    ({'conv', 'ssm'}), so prefill can hand off to decode."""
+    s: SSMConfig = cfg.ssm
+    B, S, D = x.shape
+    di, H, N, P = s.d_inner(D), s.num_heads(D), s.state_dim, s.head_dim
+    Q = min(s.chunk, S)
+    Sp = -(-S // Q) * Q
+
+    proj = mm(x, p["in_proj"])
+    z, xs, B_, C_, dt = _split_proj(proj, di, N, H)
+    conv_in = jnp.concatenate([xs, B_, C_], axis=-1)
+    conv_tail = conv_in[:, -(s.conv_width - 1):, :]  # decode conv state
+    conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv_w"], p["conv_b"]))
+    xs, B_, C_ = (conv_out[..., :di], conv_out[..., di : di + N],
+                  conv_out[..., di + N :])
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B, S, H]
+    A = -jnp.exp(p["a_log"])                                     # [H] < 0
+
+    # pad to chunk multiple
+    def padS(t):
+        return jnp.pad(t, ((0, 0), (0, Sp - S)) + ((0, 0),) * (t.ndim - 2))
+
+    cdt = jnp.dtype(s.acc_dtype)
+    xs_c = padS(xs).reshape(B, -1, Q, H, P).astype(cdt)
+    B_c = padS(B_).reshape(B, -1, Q, N).astype(cdt)
+    C_c = padS(C_).reshape(B, -1, Q, N).astype(cdt)
+    dt_c = padS(dt).reshape(B, -1, Q, H)
+    nC = Sp // Q
+
+    a = dt_c * A  # [B, nC, Q, H] log-decay per step
+    a_cum = jnp.cumsum(a, axis=2)
+    # intra-chunk: L[i, j] = exp(a_cum_i - a_cum_j) for i >= j
+    seg = a_cum[:, :, :, None, :] - a_cum[:, :, None, :, :]  # [B,nC,Q,Q,H]
+    iq = jnp.arange(Q)
+    causal = (iq[:, None] >= iq[None, :])[None, None, :, :, None]
+    L = jnp.where(causal, jnp.exp(seg), 0.0).astype(cdt)
+    cb = jnp.einsum("bcin,bcjn->bcij", C_c, B_c)  # [B, nC, Q, Q]
+    y_intra = jnp.einsum(
+        "bcij,bcijh,bcjh,bcjhp->bcihp", cb, L, dt_c.astype(cdt), xs_c
+    ).astype(jnp.float32)
+
+    # chunk final states: S_c = sum_j exp(a_last - a_cum_j) dt_j B_j x_j^T
+    decay_to_end = jnp.exp(a_cum[:, :, -1:, :] - a_cum)  # [B, nC, Q, H]
+    states = jnp.einsum(
+        "bcjh,bcjh,bcjn,bcjhp->bchnp", decay_to_end.astype(cdt),
+        dt_c.astype(cdt), B_c, xs_c
+    ).astype(jnp.float32)  # [B, nC, H, N, P]
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])  # [B, nC, H]
+
+    def chunk_scan(h, xs_):
+        st, dec = xs_
+        h_new = h * dec[:, :, None, None] + st
+        return h_new, h
+
+    h0 = jnp.zeros((B, H, N, P), jnp.float32)
+    h_final, h_prevs = jax.lax.scan(
+        chunk_scan, h0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )  # [nC, B, H, N, P] (state entering each chunk)
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)
+
+    y_inter = jnp.einsum(
+        "bcin,bcih,bchnp->bcihp", C_c.astype(jnp.float32),
+        jnp.exp(a_cum), h_prevs
+    )
+    y = (y_intra + y_inter).reshape(B, Sp, H, P)[:, :S]
+    y = y + xs_c.astype(jnp.float32).reshape(B, Sp, H, P)[:, :S] \
+        * p["d_skip"][None, None, :, None]
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = _rms_gated(y, z, p["norm_w"])
+    out = mm(y, p["out_proj"])
+    if return_state:
+        # decode state layout is [B, H, P, N]
+        state = {"conv": conv_tail, "ssm": jnp.moveaxis(h_final, -2, -1)}
+        return out, state
+    return out, None
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int):
+    s: SSMConfig = cfg.ssm
+    D = cfg.d_model
+    di, H, N, P = s.d_inner(D), s.num_heads(D), s.state_dim, s.head_dim
+    conv_dim = di + 2 * N
+    return {
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_dim), cfg.jdtype),
+        "ssm": jnp.zeros((batch, H, P, N), jnp.float32),
+    }
+
+
+def decode_ssm(p, x, cfg: ModelConfig, state):
+    """Single-token recurrence.  x: [B, 1, D]."""
+    s: SSMConfig = cfg.ssm
+    B, _, D = x.shape
+    di, H, N, P = s.d_inner(D), s.num_heads(D), s.state_dim, s.head_dim
+
+    proj = mm(x, p["in_proj"])
+    z, xs, B_, C_, dt = _split_proj(proj, di, N, H)
+    conv_in = jnp.concatenate([xs, B_, C_], axis=-1)  # [B, 1, conv_dim]
+    window = jnp.concatenate([state["conv"], conv_in], axis=1)  # [B, W, cd]
+    conv_out = jax.nn.silu(
+        jnp.einsum("bwc,wc->bc", window, p["conv_w"]) + p["conv_b"]
+    )[:, None, :]
+    xs, B_, C_ = (conv_out[..., :di], conv_out[..., di : di + N],
+                  conv_out[..., di + N :])
+
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    A = -jnp.exp(p["a_log"])
+    dec = jnp.exp(dt * A)  # [B, H]
+    xh = xs.reshape(B, H, P).astype(jnp.float32)
+    Bf = B_[:, 0].astype(jnp.float32)  # [B, N]
+    Cf = C_[:, 0].astype(jnp.float32)
+    h = state["ssm"] * dec[:, :, None, None] + jnp.einsum(
+        "bh,bn,bhp->bhpn", dt, Bf, xh
+    )
+    y = jnp.einsum("bn,bhpn->bhp", Cf, h) + xh * p["d_skip"][None, :, None]
+    y = y.reshape(B, 1, di).astype(x.dtype)
+    y = _rms_gated(y, z, p["norm_w"])
+    new_state = {"conv": window[:, 1:], "ssm": h}
+    return mm(y, p["out_proj"]), new_state

@@ -1,0 +1,8 @@
+from repro.optim.optimizers import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    value_and_grad_sparse,
+)
+from repro.optim.sparse_update import resparsify_params, sparse_aware_update
+from repro.optim.gmp import GMPSchedule, gmp_sparsity

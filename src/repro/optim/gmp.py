@@ -1,0 +1,52 @@
+"""Magnitude-pruning schedules (paper §2, §6.2): one-shot, iterative
+(gradual magnitude pruning, Zhu & Gupta), and layer-wise.
+
+These drive the Table-2 productivity study: each sparsifier differs only in
+its schedule, a handful of lines on top of the shared machinery.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["GMPSchedule", "gmp_sparsity"]
+
+
+@dataclasses.dataclass(frozen=True)
+class GMPSchedule:
+    mode: str = "iterative"     # one_shot | iterative | layer_wise
+    target_sparsity: float = 0.5
+    begin_step: int = 0
+    end_step: int = 1000
+    recompute_every: int = 100  # pattern-recompute cadence during ramp
+    num_layers: int = 12        # layer_wise: layers pruned one at a time
+
+    def sparsity_at(self, step: int) -> float:
+        return gmp_sparsity(self, step)
+
+    def recompute_at(self, step: int) -> bool:
+        if self.mode == "one_shot":
+            return step == self.begin_step
+        if step < self.begin_step or step > self.end_step:
+            return False
+        return (step - self.begin_step) % max(1, self.recompute_every) == 0
+
+    def layers_pruned_at(self, step: int) -> int:
+        """layer_wise: how many leading layers are sparse at ``step``."""
+        if self.mode != "layer_wise":
+            return self.num_layers
+        span = max(1, (self.end_step - self.begin_step) // self.num_layers)
+        return min(self.num_layers, max(0, (step - self.begin_step) // span + 1))
+
+
+def gmp_sparsity(s: GMPSchedule, step: int) -> float:
+    """Cubic ramp (Zhu & Gupta 2017) for iterative; step function for
+    one-shot; per-layer target for layer-wise."""
+    if s.mode == "one_shot":
+        return s.target_sparsity if step >= s.begin_step else 0.0
+    if step <= s.begin_step:
+        return 0.0
+    if step >= s.end_step:
+        return s.target_sparsity
+    frac = (step - s.begin_step) / max(1, s.end_step - s.begin_step)
+    return s.target_sparsity * (1.0 - (1.0 - frac) ** 3)

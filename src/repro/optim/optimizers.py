@@ -1,0 +1,131 @@
+"""Optimizers (AdamW, SGD-momentum) over possibly-sparse param pytrees.
+
+Sparse layouts are pytrees, so optimizer states simply mirror every *inexact*
+array leaf (values, masks-as-float, etc.); integer/bool metadata leaves
+(CSR indices, n:m:g blk_idx, boolean masks) carry no moments and pass through
+unchanged.  Under pjit the moment trees inherit the params' shardings, which
+is ZeRO-3: every FSDP-sharded weight has FSDP-sharded optimizer state.
+
+``value_and_grad_sparse`` wraps jax.value_and_grad with ``allow_int=True``
+(required: layout metadata is integer) and normalizes float0 cotangents to
+None so downstream tree_maps stay simple.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import dtypes
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update",
+           "value_and_grad_sparse", "clip_by_global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    # weight decay applies only to >=2-D tensors (not norms/biases/masks)
+    decay_min_ndim: int = 2
+
+
+def _is_moment_leaf(x) -> bool:
+    return hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.inexact)
+
+
+def adamw_init(params):
+    """Moment trees mirror inexact leaves; momentum in f32 (master moments)."""
+    def init(x):
+        if _is_moment_leaf(x):
+            return jnp.zeros(x.shape, jnp.float32)
+        return None
+
+    mu = jax.tree_util.tree_map(init, params)
+    nu = jax.tree_util.tree_map(init, params)
+    return {"mu": mu, "nu": nu, "step": jnp.zeros((), jnp.int32)}
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = [
+        g for g in jax.tree_util.tree_leaves(grads)
+        if g is not None and _is_moment_leaf(g)
+    ]
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves)
+    )
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+
+    def clip(g):
+        if g is None or not _is_moment_leaf(g):
+            return g
+        return g * scale.astype(g.dtype)
+
+    return jax.tree_util.tree_map(clip, grads, is_leaf=lambda x: x is None), \
+        gnorm
+
+
+def adamw_update(grads, state, params, cfg: AdamWConfig,
+                 lr_scale: jnp.ndarray | float = 1.0):
+    """Returns (updated params, new state, metrics).  Sparsity-layout
+    re-sparsification (SameFormatSparsifier) is applied by the caller via
+    optim.sparse_update — kept separate so schedules control it."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state["step"] + 1
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, mu, nu):
+        if g is None or mu is None or not _is_moment_leaf(p):
+            return p, mu, nu
+        gf = g.astype(jnp.float32)
+        mu2 = cfg.b1 * mu + (1 - cfg.b1) * gf
+        nu2 = cfg.b2 * nu + (1 - cfg.b2) * jnp.square(gf)
+        mhat = mu2 / b1c
+        nhat = nu2 / b2c
+        delta = mhat / (jnp.sqrt(nhat) + cfg.eps)
+        if cfg.weight_decay and p.ndim >= cfg.decay_min_ndim:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        p2 = p.astype(jnp.float32) - lr * delta
+        return p2.astype(p.dtype), mu2, nu2
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(_match_structure(grads, params))
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    flat_nu = treedef.flatten_up_to(state["nu"])
+    out = [upd(p, g, m, n)
+           for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    new_nu = treedef.unflatten([o[2] for o in out])
+    return new_p, {"mu": new_mu, "nu": new_nu, "step": step}, {"gnorm": gnorm}
+
+
+def _match_structure(grads, params):
+    """Normalize float0 / missing cotangents to None leaves."""
+    def norm(g):
+        if g is None:
+            return None
+        if hasattr(g, "dtype") and g.dtype == dtypes.float0:
+            return None
+        return g
+
+    return jax.tree_util.tree_map(norm, grads, is_leaf=lambda x: x is None)
+
+
+def value_and_grad_sparse(fn: Callable, **kw):
+    """jax.value_and_grad that tolerates integer/bool layout metadata."""
+    vg = jax.value_and_grad(fn, allow_int=True, **kw)
+
+    def wrapped(params, *args, **kwargs):
+        val, grads = vg(params, *args, **kwargs)
+        return val, _match_structure(grads, params)
+
+    return wrapped

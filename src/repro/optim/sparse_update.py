@@ -1,0 +1,84 @@
+"""Sparse-aware parameter updates (paper §3.4 / §4, Fig 2 right).
+
+In PyTorch-STen the in-place weight update is replaced by "calculate the
+updated weights into a new tensor [and] sparsify using SameFormatSparsifier".
+In JAX the optimizer is already functional, so this module is exactly that
+missing piece: after the dense-math update, every sparse-layout parameter is
+re-sparsified to its own format — cheap fixed-pattern masking most steps, a
+full pattern recompute when the schedule says so (paper Fig 9: 'fixed' vs
+'new' sparsification).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dispatch import OutFormat
+from repro.core.layouts import (
+    FixedMaskTensor,
+    GroupedNMTensor,
+    NMTensor,
+    SparsityLayout,
+)
+from repro.core.sparsifiers import SameFormatSparsifier
+from repro.core.autograd import sparsify_grads
+
+__all__ = ["resparsify_params", "sparse_aware_update"]
+
+
+def resparsify_params(params, *, recompute_pattern: bool = False):
+    """Apply SameFormatSparsifier to every sparse-layout leaf."""
+    sp = SameFormatSparsifier(fixed_pattern=not recompute_pattern)
+
+    def visit(leaf):
+        if isinstance(leaf, FixedMaskTensor) and recompute_pattern:
+            # recompute sees the RAW value buffer (STE regrowth: pruned
+            # weights keep receiving updates and may re-enter the mask)
+            return sp.resparsify(leaf, leaf.val)
+        if isinstance(leaf, GroupedNMTensor) and leaf.val.ndim == 4:
+            # scan-stacked [L, ...] layout: regather per layer
+            return jax.vmap(lambda t: sp.resparsify(t, t.to_dense()))(leaf)
+        if isinstance(leaf, NMTensor) and leaf.val.ndim == \
+                len(leaf.dense_shape) + 2:
+            return jax.vmap(lambda t: sp.resparsify(t, t.to_dense()))(leaf)
+        if isinstance(leaf, (FixedMaskTensor, GroupedNMTensor, NMTensor)):
+            return sp.resparsify(leaf, leaf.to_dense())
+        return leaf
+
+    return jax.tree_util.tree_map(
+        visit, params, is_leaf=lambda x: isinstance(x, SparsityLayout)
+    )
+
+
+def sparse_aware_update(update_fn, grads, state, params, *,
+                        grad_formats: Optional[dict] = None,
+                        recompute_pattern=False, **kw):
+    """Optimizer update + STen semantics:
+
+    1. sparsify gradients per the builder's grad formats (paper §3.4
+       ``set_weight_grad``);
+    2. dense-math optimizer update (moments over stored values);
+    3. re-sparsify sparse params (SameFormatSparsifier) — fixed pattern by
+       default, recomputed when the sparsification schedule triggers.
+
+    ``recompute_pattern`` may be a Python bool or a traced bool; the traced
+    case uses lax.cond over the two re-sparsification paths.
+    """
+    if grad_formats:
+        grads = sparsify_grads(grads, grad_formats)
+    new_params, new_state, metrics = update_fn(grads, state, params, **kw)
+    if isinstance(recompute_pattern, bool):
+        new_params = resparsify_params(
+            new_params, recompute_pattern=recompute_pattern
+        )
+    else:
+        new_params = jax.lax.cond(
+            recompute_pattern,
+            lambda p: resparsify_params(p, recompute_pattern=True),
+            lambda p: resparsify_params(p, recompute_pattern=False),
+            new_params,
+        )
+    return new_params, new_state, metrics

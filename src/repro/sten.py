@@ -1,0 +1,26 @@
+"""The ``sten``-style user API (paper §3) in one namespace.
+
+>>> from repro import sten
+>>> w = sten.dense_to_grouped_nm(W, n=1, m=4, g=16)
+>>> y = sten.linear(x, w)                       # dispatches to the kernel
+>>> sb = sten.SparsityBuilder()
+>>> sb.set_weight("mlp.wi", sten.GroupedNMSparsifier(1, 4, 16))
+>>> sparse_params, apply = sb.get_sparse_model(params, model.apply)
+"""
+
+from repro.core import *  # noqa: F401,F403
+from repro.core import (  # explicit re-exports for clarity
+    SparsityBuilder,
+    sparsified_op,
+    register_layout,
+    register_op_impl,
+    register_sparsifier_implementation,
+)
+
+
+def torch_tensor_to_csr(sparsifier, x):
+    """Paper §3.1 convenience spelling: sparsify a dense tensor to CSR."""
+    from repro.core.layouts import CsrTensor
+    from repro.core.sparsifiers import apply_sparsifier
+
+    return apply_sparsifier(sparsifier, x, CsrTensor)

@@ -1,0 +1,11 @@
+# NOTE: no XLA_FLAGS / device-count overrides here — smoke tests and benches
+# must see the real single CPU device.  Distributed tests spawn subprocesses
+# that set --xla_force_host_platform_device_count themselves.
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,67 @@
+"""Per-architecture reduced-config smoke tests (assignment deliverable (f)):
+instantiate each family at small scale, run one forward/train step on CPU,
+assert output shapes + finite values; plus a prefill+decode step."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_smoke
+from repro.models import decode_step, init_lm, loss_fn, prefill
+from repro.optim import AdamWConfig, adamw_init, adamw_update, \
+    value_and_grad_sparse
+
+B, S = 2, 32
+ARCH_IDS = [a for a in ARCHS if a != "bert-base-sten"]
+
+
+def make_batch(cfg, key):
+    batch = {
+        "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab),
+        "labels": jax.random.randint(jax.random.PRNGKey(99), (B, S), 0,
+                                     cfg.vocab),
+    }
+    if cfg.vision_prefix:
+        batch["prefix_embeds"] = jax.random.normal(
+            key, (B, cfg.vision_prefix, cfg.d_model), cfg.jdtype)
+    if cfg.n_enc_layers:
+        batch["enc_embeds"] = jax.random.normal(
+            key, (B, 16, cfg.d_model), cfg.jdtype)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_smoke(arch):
+    cfg = get_smoke(arch)
+    key = jax.random.PRNGKey(0)
+    params = init_lm(key, cfg)
+    batch = make_batch(cfg, key)
+    (loss, aux), grads = value_and_grad_sparse(
+        lambda p: loss_fn(p, cfg, batch, remat="none"), has_aux=True
+    )(params)
+    assert np.isfinite(float(loss))
+    assert float(loss) > 0.5  # not degenerate
+    # one optimizer step keeps everything finite
+    state = adamw_init(params)
+    new_p, new_s, m = adamw_update(grads, state, params, AdamWConfig(lr=1e-3))
+    for leaf in jax.tree_util.tree_leaves(new_p):
+        if hasattr(leaf, "dtype") and jnp.issubdtype(leaf.dtype, jnp.floating):
+            assert bool(jnp.all(jnp.isfinite(leaf.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_smoke(arch):
+    cfg = get_smoke(arch)
+    key = jax.random.PRNGKey(0)
+    params = init_lm(key, cfg)
+    batch = make_batch(cfg, key)
+    logits, cache = prefill(params, cfg, batch["tokens"], cache_len=S + 4,
+                            enc_embeds=batch.get("enc_embeds"),
+                            prefix_embeds=batch.get("prefix_embeds"))
+    assert logits.shape == (B, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, dtype=np.float32)).all()
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    logits2, cache2 = decode_step(params, cfg, tok, cache, jnp.asarray(S))
+    assert logits2.shape == (B, cfg.vocab)
+    assert np.isfinite(np.asarray(logits2, dtype=np.float32)).all()

@@ -1,0 +1,98 @@
+"""Checkpointing: atomic save/restore, hashes, async manager, sparse
+layouts, bf16, elastic restore template."""
+
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import CheckpointManager, load_pytree, save_pytree
+from repro.core.layouts import FixedMaskTensor
+from repro.core import nmg
+
+KEY = jax.random.PRNGKey(0)
+
+
+def tree():
+    return {
+        "dense": jax.random.normal(KEY, (8, 16)),
+        "bf16": jax.random.normal(KEY, (4, 4)).astype(jnp.bfloat16),
+        "sparse": FixedMaskTensor.from_dense(
+            jax.random.normal(jax.random.PRNGKey(1), (8, 8))),
+        "nmg": nmg.dense_to_grouped_nm(
+            jax.random.normal(jax.random.PRNGKey(2), (8, 96)), 2, 4, 2),
+        "step": jnp.asarray(7, jnp.int32),
+    }
+
+
+def assert_tree_equal(a, b):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(
+            np.asarray(x, dtype=np.float32) if hasattr(x, "dtype") and
+            "bfloat16" in str(x.dtype) else np.asarray(x),
+            np.asarray(y, dtype=np.float32) if hasattr(y, "dtype") and
+            "bfloat16" in str(y.dtype) else np.asarray(y),
+        )
+
+
+def test_save_load_roundtrip(tmp_path):
+    t = tree()
+    save_pytree(t, tmp_path / "ck", meta={"step": 7})
+    t2, meta = load_pytree(t, tmp_path / "ck")
+    assert meta["step"] == 7
+    assert_tree_equal(t, t2)
+    assert isinstance(t2["sparse"], FixedMaskTensor)
+
+
+def test_corruption_detected(tmp_path):
+    t = {"w": jnp.arange(16.0)}
+    save_pytree(t, tmp_path / "ck")
+    man = json.loads((tmp_path / "ck" / "MANIFEST.json").read_text())
+    man["index"][0]["sha"] = "deadbeefdeadbeef"
+    (tmp_path / "ck" / "MANIFEST.json").write_text(json.dumps(man))
+    with pytest.raises(IOError):
+        load_pytree(t, tmp_path / "ck")
+
+
+def test_structure_mismatch_detected(tmp_path):
+    save_pytree({"w": jnp.ones(4)}, tmp_path / "ck")
+    with pytest.raises(ValueError):
+        load_pytree({"w": jnp.ones(4), "extra": jnp.ones(2)},
+                    tmp_path / "ck")
+
+
+def test_manager_rotation_and_latest(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    t = {"w": jnp.zeros(4)}
+    for step in (10, 20, 30):
+        mgr.save(step, {"w": jnp.full(4, float(step))}, blocking=True)
+    assert mgr.latest_step() == 30
+    dirs = sorted(p.name for p in tmp_path.glob("step_*"))
+    assert len(dirs) == 2  # rotation kept the last two
+    step, got, _ = mgr.restore_latest(t)
+    assert step == 30
+    np.testing.assert_allclose(np.asarray(got["w"]), 30.0)
+
+
+def test_restore_template_shapedtype(tmp_path):
+    """Elastic restore: the template can be ShapeDtypeStructs (fresh job)."""
+    t = {"w": jax.random.normal(KEY, (4, 4))}
+    save_pytree(t, tmp_path / "ck")
+    template = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t)
+    t2, _ = load_pytree(template, tmp_path / "ck")
+    assert_tree_equal(t, t2)
+
+
+def test_atomic_commit_no_partial(tmp_path):
+    """A directory without MANIFEST is never produced by a finished save."""
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, {"w": jnp.ones(8)}, blocking=True)
+    for d in tmp_path.glob("step_*"):
+        assert (d / "MANIFEST.json").exists()

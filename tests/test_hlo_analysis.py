@@ -1,0 +1,71 @@
+"""The structural HLO analyzer: known-count programs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import analyze_hlo, roofline_terms
+
+
+def compile_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_single_dot_flops():
+    a = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    b = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+    r = analyze_hlo(compile_text(lambda x, y: x @ y, a, b))
+    assert r["flops"] == 2 * 64 * 128 * 32
+
+
+def test_scan_multiplies_by_trip_count():
+    w = jax.ShapeDtypeStruct((10, 32, 32), jnp.float32)
+    x = jax.ShapeDtypeStruct((4, 32), jnp.float32)
+
+    def f(w, x):
+        def body(c, wi):
+            return c @ wi, ()
+        out, _ = jax.lax.scan(body, x, w)
+        return out
+
+    r = analyze_hlo(compile_text(f, w, x))
+    assert r["flops"] == 10 * 2 * 4 * 32 * 32
+    assert r["max_trip"] == 10 and r["num_whiles"] == 1
+
+
+def test_nested_scans_compose():
+    w = jax.ShapeDtypeStruct((3, 5, 16, 16), jnp.float32)
+    x = jax.ShapeDtypeStruct((2, 16), jnp.float32)
+
+    def f(w, x):
+        def outer(c, wo):
+            def inner(ci, wi):
+                return ci @ wi, ()
+            c2, _ = jax.lax.scan(inner, c, wo)
+            return c2, ()
+        out, _ = jax.lax.scan(outer, x, w)
+        return out
+
+    r = analyze_hlo(compile_text(f, w, x))
+    assert r["flops"] == 3 * 5 * 2 * 2 * 16 * 16
+    assert r["num_whiles"] == 2
+
+
+def test_gather_not_charged_table():
+    table = jax.ShapeDtypeStruct((100000, 64), jnp.float32)
+    idx = jax.ShapeDtypeStruct((8,), jnp.int32)
+    r = analyze_hlo(compile_text(lambda t, i: jnp.take(t, i, axis=0),
+                                 table, idx))
+    # bytes must be ~ gathered rows, not the 25 MB table
+    assert r["bytes"] < 1e5, r["bytes"]
+
+
+def test_roofline_dominance():
+    t = roofline_terms(197e12, 100e9, 1e9)   # 1s compute, 0.12s mem
+    assert t.dominant == "compute"
+    t = roofline_terms(1e12, 819e9, 1e9)
+    assert t.dominant == "memory"
+    t = roofline_terms(1e12, 1e9, 500e9)
+    assert t.dominant == "collective"
+    assert t.bound_s == pytest.approx(10.0)

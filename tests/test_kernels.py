@@ -1,0 +1,107 @@
+"""Pallas kernel allclose sweeps vs the pure-jnp oracles (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import nmg
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+KEY = jax.random.PRNGKey(3)
+
+
+@pytest.mark.parametrize("n,m,g,gr", [
+    (2, 4, 1, 1), (2, 4, 2, 4), (1, 4, 4, 2), (3, 6, 1, 2), (1, 2, 8, 8),
+])
+@pytest.mark.parametrize("shape", [(16, 96, 64), (8, 192, 128)])
+def test_nmg_spmm_pallas_allclose(n, m, g, gr, shape):
+    R, K, N = shape
+    x = jax.random.normal(KEY, (R, K))
+    b = jax.random.normal(jax.random.PRNGKey(1), (K, N))
+    t = nmg.dense_to_grouped_nm(x, n=n, m=m, g=g, gr=gr)
+    ref = kref.nmg_spmm_ref(t, b)
+    out = kops.nmg_spmm(t, b, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_nmg_spmm_dtypes(dtype):
+    x = jax.random.normal(KEY, (8, 96)).astype(dtype)
+    b = jax.random.normal(jax.random.PRNGKey(1), (96, 64)).astype(dtype)
+    t = nmg.dense_to_grouped_nm(x, n=2, m=4, g=2, gr=4)
+    ref = kref.nmg_spmm_ref(t, b)
+    out = kops.nmg_spmm(t, b, use_pallas=True)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=tol, atol=tol)
+
+
+def test_nmg_spmm_xla_matches_pallas():
+    x = jax.random.normal(KEY, (16, 192))
+    b = jax.random.normal(jax.random.PRNGKey(1), (192, 64))
+    t = nmg.dense_to_grouped_nm(x, n=2, m=4, g=2, gr=4)
+    np.testing.assert_allclose(
+        np.asarray(kops.nmg_spmm_xla(t, b)),
+        np.asarray(kops.nmg_spmm(t, b, use_pallas=True)),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_nmg_linear_orientation():
+    """Serving path: weight [K, N] sparse along input axis."""
+    w = jax.random.normal(KEY, (96, 64))
+    wt = nmg.dense_to_grouped_nm(w, n=2, m=4, g=2, gr=4, sparse_dim=0)
+    x = jax.random.normal(jax.random.PRNGKey(2), (8, 96))
+    np.testing.assert_allclose(
+        np.asarray(kops.nmg_linear(x, wt)),
+        np.asarray(x @ wt.to_dense()),
+        rtol=1e-3, atol=1e-4,
+    )
+
+
+@pytest.mark.parametrize("n,m", [(1, 4), (2, 4), (2, 8), (3, 6), (1, 10)])
+@pytest.mark.parametrize("shape", [(32, 64), (7, 130), (256, 520)])
+def test_nm_mask_kernel_allclose(n, m, shape):
+    x = jax.random.normal(KEY, shape)
+    got = kops.nm_mask(x, n, m, use_pallas=True)
+    want = kref.nm_mask_ref(x, n, m)
+    assert bool(jnp.all(got == want))
+
+
+def test_nm_mask_tie_breaking():
+    """Exact tie-break agreement with top_k (lowest index wins)."""
+    x = jnp.ones((4, 16))
+    got = kops.nm_mask(x, 2, 4, use_pallas=True)
+    want = kref.nm_mask_ref(x, 2, 4)
+    assert bool(jnp.all(got == want))
+
+
+@pytest.mark.parametrize("shape", [(32, 48, 40), (64, 64, 64), (33, 70, 9)])
+@pytest.mark.parametrize("threshold", [0.5, 2.0])
+def test_fused_matmul_threshold_allclose(shape, threshold):
+    M, K, N = shape
+    a = jax.random.normal(KEY, (M, K))
+    b = jax.random.normal(jax.random.PRNGKey(1), (K, N))
+    v_p, m_p = kops.matmul_threshold(a, b, threshold, use_pallas=True)
+    v_r, m_r = kref.matmul_threshold_ref(a, b, threshold)
+    np.testing.assert_allclose(np.asarray(v_p), np.asarray(v_r),
+                               rtol=1e-4, atol=1e-5)
+    assert bool(jnp.all(m_p == m_r))
+
+
+def test_kernel_grad_through_xla_path():
+    """The serving op is differentiable w.r.t. the stored values (STen's
+    transparent backprop for custom formats)."""
+    x = jax.random.normal(KEY, (4, 96))
+    w = jax.random.normal(jax.random.PRNGKey(1), (96, 32))
+    wt = nmg.dense_to_grouped_nm(w, n=2, m=4, g=2, sparse_dim=0)
+
+    def loss(t):
+        return jnp.sum(kops.nmg_spmm_xla(t, jnp.ones((96, 32))) ** 2)
+
+    g = jax.grad(loss, allow_int=True)(wt)
+    assert g.val.shape == wt.val.shape
+    assert np.isfinite(np.asarray(g.val)).all()

@@ -1,0 +1,151 @@
+"""Layout round-trips and invariants (unit + hypothesis property tests)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import nmg
+from repro.core.layouts import (
+    CooTensor,
+    CsrTensor,
+    DenseTensor,
+    FixedMaskTensor,
+    GroupedNMTensor,
+    NMTensor,
+    all_layouts,
+    nm_patterns,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def rand(shape, key=KEY):
+    return jax.random.normal(key, shape)
+
+
+# ---------------------------------------------------------------------------
+# exact round trips
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(4, 8), (16, 48), (7, 13), (1, 5)])
+def test_csr_roundtrip(shape):
+    x = rand(shape)
+    np.testing.assert_allclose(CsrTensor.from_dense(x).to_dense(), x,
+                               rtol=1e-6)
+
+
+@pytest.mark.parametrize("shape", [(4, 8), (3, 5, 7), (16,)])
+def test_coo_roundtrip(shape):
+    x = rand(shape)
+    np.testing.assert_allclose(CooTensor.from_dense(x).to_dense(), x,
+                               rtol=1e-6)
+
+
+def test_fixed_mask_roundtrip():
+    x = rand((8, 16))
+    t = FixedMaskTensor.from_dense(x)
+    np.testing.assert_allclose(t.to_dense(), x, rtol=1e-6)
+
+
+@given(
+    rows=st.integers(1, 12),
+    cols=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=25, deadline=None)
+def test_csr_roundtrip_property(rows, cols, seed):
+    x = np.random.default_rng(seed).normal(size=(rows, cols)).astype(
+        np.float32)
+    x[np.abs(x) < 0.5] = 0  # induce genuine sparsity
+    got = np.asarray(CsrTensor.from_dense(jnp.asarray(x)).to_dense())
+    np.testing.assert_allclose(got, x, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# n:m and n:m:g structural invariants
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,m", [(1, 4), (2, 4), (1, 2), (3, 6)])
+def test_nm_block_invariant(n, m):
+    x = rand((8, 48))
+    d = np.asarray(NMTensor.from_dense(x, n, m).to_dense())
+    k_pad = -(-48 // m) * m
+    dp = np.pad(d, ((0, 0), (0, k_pad - 48)))
+    nnz = (dp.reshape(8, -1, m) != 0).sum(-1)
+    assert nnz.max() <= n
+
+
+@pytest.mark.parametrize("n,m,g,gr", [(2, 4, 1, 1), (2, 4, 4, 1),
+                                      (1, 4, 4, 2), (3, 6, 2, 1)])
+def test_nmg_block_invariant(n, m, g, gr):
+    x = rand((8, 96))
+    t = nmg.dense_to_grouped_nm(x, n=n, m=m, g=g, gr=gr)
+    d = np.asarray(t.to_dense())
+    assert d.shape == (8, 96)
+    nnz = (d.reshape(8, -1, m) != 0).sum(-1)
+    assert nnz.max() <= n
+    # kept values must equal the originals at kept positions
+    mask = d != 0
+    np.testing.assert_allclose(d[mask], np.asarray(x)[mask], rtol=1e-6)
+
+
+def test_nmg_pattern_capacity():
+    """Within a chunk each pattern appears exactly g times (paper §5)."""
+    n, m, g = 2, 4, 3
+    import math
+
+    C = math.comb(m, n)
+    x = rand((4, m * C * g * 2))
+    t = nmg.dense_to_grouped_nm(x, n=n, m=m, g=g)
+    pats = nm_patterns(n, m)
+    d = np.asarray(t.to_dense()).reshape(4, -1, m)
+    # reconstruct each block's pattern and count per chunk
+    for r in range(4):
+        for c in range(2):
+            counts = {}
+            for b in range(C * g):
+                blk = d[r, c * C * g + b]
+                pat = tuple(np.nonzero(blk)[0])
+                # subset of some full pattern (ties/zeros can reduce nnz)
+                counts[pat] = counts.get(pat, 0) + 1
+            assert sum(counts.values()) == C * g
+
+
+def test_revolving_door_order():
+    """Adjacent patterns differ in exactly one position (paper §5.1)."""
+    for n, m in [(1, 4), (2, 4), (2, 5), (3, 6)]:
+        pats = nm_patterns(n, m)
+        for a, b in zip(pats[:-1], pats[1:]):
+            assert len(set(a) ^ set(b)) == 2, (n, m, a, b)
+
+
+def test_nmg_transposed_orientation():
+    x = rand((96, 8))
+    t = nmg.dense_to_grouped_nm(x, n=2, m=4, g=2, sparse_dim=0)
+    d = np.asarray(t.to_dense())
+    assert d.shape == (96, 8)
+    nnz = (d.T.reshape(8, -1, 4) != 0).sum(-1)
+    assert nnz.max() <= 2
+
+
+def test_layouts_are_pytrees():
+    x = rand((8, 16))
+    for t in [CsrTensor.from_dense(x), CooTensor.from_dense(x),
+              FixedMaskTensor.from_dense(x), NMTensor.from_dense(x, 2, 4),
+              nmg.dense_to_grouped_nm(x, 2, 4, 2)]:
+        leaves, treedef = jax.tree_util.tree_flatten(t)
+        t2 = jax.tree_util.tree_unflatten(treedef, leaves)
+        np.testing.assert_allclose(t2.to_dense(), t.to_dense())
+        # and jit-traceable
+        f = jax.jit(lambda z: z.to_dense().sum())
+        f(t)
+
+
+def test_registry_contains_builtins():
+    names = set(all_layouts())
+    assert {"DenseTensor", "CsrTensor", "CooTensor", "FixedMaskTensor",
+            "NMTensor", "GroupedNMTensor"} <= names

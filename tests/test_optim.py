@@ -1,0 +1,130 @@
+"""Optimizer + sparse-aware update + GMP schedules."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.layouts import FixedMaskTensor, GroupedNMTensor
+from repro.core.sparsifiers import ScalarFractionSparsifier, apply_sparsifier
+from repro.optim import (
+    AdamWConfig,
+    GMPSchedule,
+    adamw_init,
+    adamw_update,
+    gmp_sparsity,
+    value_and_grad_sparse,
+)
+from repro.optim.sparse_update import resparsify_params, sparse_aware_update
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_adamw_converges_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0, 2.0])}
+    state = adamw_init(params)
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0)
+    vg = value_and_grad_sparse(lambda p: jnp.sum(p["w"] ** 2))
+    for _ in range(200):
+        _, g = vg(params)
+        params, state, _ = adamw_update(g, state, params, cfg)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 1e-2
+
+
+def test_grad_clip():
+    params = {"w": jnp.ones((4,))}
+    state = adamw_init(params)
+    g = {"w": jnp.full((4,), 100.0)}
+    _, _, m = adamw_update(g, state, params, AdamWConfig(grad_clip=1.0))
+    assert float(m["gnorm"]) == pytest.approx(200.0)
+
+
+def test_sparse_param_training_preserves_mask():
+    """Masked sparse training: pruned entries stay zero through updates
+    (SameFormatSparsifier after each step, paper Fig 2)."""
+    x = jax.random.normal(KEY, (8, 8))
+    w = apply_sparsifier(ScalarFractionSparsifier(0.5), x, FixedMaskTensor)
+    params = {"w": w}
+    state = adamw_init(params)
+    cfg = AdamWConfig(lr=0.05, weight_decay=0.0)
+    target = jax.random.normal(jax.random.PRNGKey(1), (8, 8))
+    vg = value_and_grad_sparse(
+        lambda p: jnp.sum((p["w"].to_dense() - target) ** 2))
+    mask0 = np.asarray(w.mask)
+    for _ in range(10):
+        _, g = vg(params)
+        params, state, _ = sparse_aware_update(
+            lambda g_, s_, p_: adamw_update(g_, s_, p_, cfg),
+            g, state, params,
+        )
+    d = np.asarray(params["w"].to_dense())
+    assert np.array_equal(np.asarray(params["w"].mask), mask0)
+    assert (d[~mask0] == 0).all()
+    # and it actually learned on the kept entries
+    err = np.abs(d - np.asarray(target))[mask0].mean()
+    err0 = np.abs(np.asarray(x) - np.asarray(target))[mask0].mean()
+    assert err < err0
+
+
+def test_sparse_aware_update_nmg_param():
+    x = jax.random.normal(KEY, (8, 96))
+    from repro.core import nmg
+
+    w = nmg.dense_to_grouped_nm(x, 2, 4, 2)
+    params = {"w": w}
+    state = adamw_init(params)
+    vg = value_and_grad_sparse(lambda p: jnp.sum(p["w"].to_dense() ** 2))
+    _, g = vg(params)
+    new_p, _, _ = sparse_aware_update(
+        lambda g_, s_, p_: adamw_update(g_, s_, p_, AdamWConfig(lr=0.1)),
+        g, state, params,
+    )
+    t = new_p["w"]
+    assert isinstance(t, GroupedNMTensor)
+    assert np.array_equal(np.asarray(t.blk_idx), np.asarray(w.blk_idx))
+    # structural invariant survives the update
+    d = np.asarray(t.to_dense())
+    nnz = (d.reshape(8, -1, 4) != 0).sum(-1)
+    assert nnz.max() <= 2
+
+
+def test_resparsify_recompute_changes_pattern_when_needed():
+    x = jnp.asarray([[1.0, 0.0, 0.0, 0.0] * 8] * 4)
+    w = FixedMaskTensor(x, x != 0)
+    # values move: entry 1 becomes big but masked
+    w2 = FixedMaskTensor(w.val.at[:, 1].set(10.0), w.mask)
+    out = resparsify_params({"w": w2}, recompute_pattern=True)["w"]
+    assert bool(out.mask[0, 1])
+
+
+def test_gmp_schedules():
+    s = GMPSchedule(mode="iterative", target_sparsity=0.8, begin_step=10,
+                    end_step=110, recompute_every=20)
+    assert gmp_sparsity(s, 0) == 0.0
+    assert gmp_sparsity(s, 10) == 0.0
+    assert 0 < gmp_sparsity(s, 60) < 0.8
+    assert gmp_sparsity(s, 110) == pytest.approx(0.8)
+    assert gmp_sparsity(s, 200) == pytest.approx(0.8)
+    # cubic ramp is monotone
+    vals = [gmp_sparsity(s, t) for t in range(10, 111, 10)]
+    assert all(b >= a for a, b in zip(vals, vals[1:]))
+    assert s.recompute_at(10) and s.recompute_at(30)
+    assert not s.recompute_at(31)
+
+    one = GMPSchedule(mode="one_shot", target_sparsity=0.5, begin_step=5)
+    assert gmp_sparsity(one, 4) == 0.0 and gmp_sparsity(one, 5) == 0.5
+    assert one.recompute_at(5) and not one.recompute_at(6)
+
+    lw = GMPSchedule(mode="layer_wise", begin_step=0, end_step=120,
+                     num_layers=12)
+    assert lw.layers_pruned_at(0) == 1
+    assert lw.layers_pruned_at(119) == 12
+
+
+def test_moments_skip_integer_leaves():
+    x = jax.random.normal(KEY, (8, 8))
+    w = apply_sparsifier(ScalarFractionSparsifier(0.5), x, FixedMaskTensor)
+    state = adamw_init({"w": w})
+    mu_leaves = jax.tree_util.tree_leaves(
+        state["mu"], is_leaf=lambda z: z is None)
+    assert any(l is None for l in mu_leaves)  # bool mask has no moment

@@ -1,0 +1,104 @@
+"""Sparsifier taxonomy semantics (paper Table 1) + builder integration."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.layouts import CsrTensor, DenseTensor, FixedMaskTensor
+from repro.core.sparsifiers import (
+    BLOCKING,
+    MATERIALIZING,
+    STREAMING,
+    BlockwiseFractionSparsifier,
+    GroupedNMSparsifier,
+    KeepAll,
+    NMSparsifier,
+    RandomFractionSparsifier,
+    SameFormatSparsifier,
+    ScalarFractionSparsifier,
+    ScalarThresholdSparsifier,
+    apply_sparsifier,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_taxonomy_matches_table1():
+    assert KeepAll().kind == STREAMING and KeepAll().passes == 1
+    assert RandomFractionSparsifier().kind == STREAMING
+    assert ScalarThresholdSparsifier().kind == STREAMING
+    assert NMSparsifier().kind == BLOCKING and NMSparsifier().passes == 2
+    assert GroupedNMSparsifier().kind == BLOCKING
+    assert ScalarFractionSparsifier().kind == MATERIALIZING
+    assert BlockwiseFractionSparsifier().kind == MATERIALIZING
+
+
+def test_keep_all_identity():
+    x = jax.random.normal(KEY, (8, 8))
+    out = apply_sparsifier(KeepAll(), x, DenseTensor)
+    np.testing.assert_allclose(out.to_dense(), x)
+
+
+@given(frac=st.floats(0.1, 0.9), seed=st.integers(0, 1000))
+@settings(max_examples=15, deadline=None)
+def test_scalar_fraction_prunes_exact_fraction(frac, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (32, 32))
+    m = ScalarFractionSparsifier(frac).mask(x)
+    kept = float(jnp.mean(m.astype(jnp.float32)))
+    assert abs(kept - (1 - frac)) < 2.0 / x.size + 1e-3
+
+
+def test_scalar_fraction_keeps_largest():
+    x = jnp.asarray([[1.0, -5.0, 0.1, 3.0]])
+    m = np.asarray(ScalarFractionSparsifier(0.5).mask(x))
+    assert m[0, 1] and m[0, 3] and not m[0, 0] and not m[0, 2]
+
+
+def test_threshold_streaming_semantics():
+    x = jnp.asarray([0.5, -2.0, 1.5, -0.1])
+    m = np.asarray(ScalarThresholdSparsifier(1.0).mask(x))
+    np.testing.assert_array_equal(m, [False, True, True, False])
+
+
+def test_random_fraction_rate():
+    x = jnp.ones((64, 64))
+    m = RandomFractionSparsifier(0.3).mask(x, jax.random.PRNGKey(5))
+    assert abs(float(jnp.mean(m.astype(jnp.float32))) - 0.7) < 0.05
+
+
+def test_blockwise_drops_whole_blocks():
+    x = jax.random.normal(KEY, (4, 32))
+    m = np.asarray(BlockwiseFractionSparsifier(0.5, block=4).mask(x))
+    blocks = m.reshape(4, 8, 4)
+    per_block = blocks.sum(-1)
+    assert set(np.unique(per_block)) <= {0, 4}  # all-or-nothing
+
+
+def test_same_format_fixed_mask():
+    x = jax.random.normal(KEY, (8, 8))
+    t = apply_sparsifier(ScalarFractionSparsifier(0.5), x, FixedMaskTensor)
+    x2 = x * 2.0
+    t2 = SameFormatSparsifier(fixed_pattern=True).resparsify(t, x2)
+    assert np.array_equal(np.asarray(t2.mask), np.asarray(t.mask))
+    np.testing.assert_allclose(
+        np.asarray(t2.to_dense()),
+        np.asarray(x2 * t.mask.astype(x2.dtype)), rtol=1e-6)
+
+
+def test_same_format_csr_capacity_preserved():
+    x = jax.random.normal(KEY, (8, 8))
+    t = apply_sparsifier(ScalarFractionSparsifier(0.5), x, CsrTensor)
+    t2 = SameFormatSparsifier().resparsify(t, x)
+    assert t2.nnz_cap == t.nnz_cap
+    np.testing.assert_allclose(np.asarray(t2.to_dense()),
+                               np.asarray(t.to_dense()), rtol=1e-6)
+
+
+def test_sparsifier_to_fixed_mask_and_csr_agree():
+    x = jax.random.normal(KEY, (16, 16))
+    sp = ScalarFractionSparsifier(0.7)
+    a = apply_sparsifier(sp, x, FixedMaskTensor).to_dense()
+    b = apply_sparsifier(sp, x, CsrTensor).to_dense()
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
