@@ -1,0 +1,33 @@
+"""Version-portable ``shard_map``.
+
+jax moved ``shard_map`` from ``jax.experimental.shard_map`` to the top
+level and renamed its replication-check kwarg (``check_rep`` ->
+``check_vma``) across releases.  Callers import :func:`shard_map` from here
+and may pass either kwarg name; the shim forwards to whatever this jax
+provides.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map"]
+
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+    _CHECK_KW = "check_vma"
+else:  # pragma: no cover - depends on installed jax
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f=None, **kw):
+    """``jax.shard_map`` / ``jax.experimental.shard_map.shard_map``, with
+    ``check_vma``/``check_rep`` accepted interchangeably.  Usable directly
+    or as ``functools.partial(shard_map, mesh=..., ...)`` decorator."""
+    for alias in ("check_vma", "check_rep"):
+        if alias in kw and alias != _CHECK_KW:
+            kw[_CHECK_KW] = kw.pop(alias)
+    if f is None:
+        return lambda fn: _shard_map(fn, **kw)
+    return _shard_map(f, **kw)

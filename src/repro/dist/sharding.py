@@ -1,0 +1,330 @@
+"""Logical-axis sharding rules for sparse and dense param pytrees.
+
+Model code names *logical* axes ("batch", "seq", "heads", "ff", "expert",
+"vocab", "embed"); this module maps them onto *mesh* axes ("pod", "data",
+"model") so the model stack stays mesh-agnostic (see models/common.py).
+Three pieces:
+
+  * :class:`ShardingRules` — a frozen dataclass holding the logical->mesh
+    assignment, with :meth:`ShardingRules.resolve` filtering each rule down
+    to the axes a concrete mesh actually has (so the same rules object works
+    on the 2-axis host mesh and the 3-axis multi-pod production mesh);
+  * :func:`use_rules` / :func:`active_rules` — trace-time context management
+    so :func:`logical_constraint` calls inside model code can find the
+    active (mesh, rules) pair without threading it through every function;
+  * :func:`param_specs` / :func:`batch_spec` / :func:`tree_shardings` —
+    path-pattern mapping from a params pytree to ``PartitionSpec`` /
+    ``NamedSharding`` trees.  Sparse layout leaves are first-class: a
+    :class:`~repro.core.layouts.FixedMaskTensor`'s value and mask receive
+    *identical* specs (an exchange or matmul over mismatched value/mask
+    shards would silently de-align the sparsity pattern), while compressed
+    layouts (n:m:g, CSR, COO) replicate — their buffers do not follow the
+    dense dims, so replication is the safe default until a layout-aware
+    partitioner exists.
+
+Every sharded dim is divisibility-checked against the mesh axes assigned to
+it and dropped (replicated) when it does not divide — smoke-scale configs
+keep working on wide meshes without per-config rule surgery.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from contextlib import contextmanager
+from typing import Any, Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.layouts import FixedMaskTensor, SparsityLayout
+
+__all__ = [
+    "Axes",
+    "ShardingRules",
+    "use_rules",
+    "active_rules",
+    "divisible",
+    "logical_constraint",
+    "param_specs",
+    "batch_spec",
+    "tree_shardings",
+]
+
+#: a logical-axis assignment: no sharding, one mesh axis, or several
+Axes = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Logical-axis -> mesh-axis assignment.
+
+    Fields may be ``None`` (replicate), a mesh-axis name, a tuple of names,
+    or a comma-separated string (the CLI hillclimb form, e.g.
+    ``--opt heads=data,model``).  Defaults give data parallelism over
+    ("pod", "data") and tensor/expert parallelism over "model" — the
+    production layout the dry-run grid assumes.
+    """
+
+    batch: Axes = ("pod", "data")     # token/batch dims of activations
+    seq: Axes = None                  # sequence dim (None: no seq-parallel)
+    embed: Axes = None                # d_model dim of weights
+    heads: Axes = "model"             # attention-head (projection out) dims
+    ff: Axes = "model"                # MLP hidden dims
+    vocab: Axes = "model"             # vocabulary dims (embedding / lm_head)
+    expert: Axes = "model"            # MoE expert dim (expert parallelism)
+
+    def resolve(self, logical: str, avail: Any) -> Axes:
+        """Resolve a logical axis to the mesh axes present in ``avail``.
+
+        Returns ``None`` (replicate), a single axis name, or a tuple of
+        names.  Unknown logical names resolve to ``None`` so model code can
+        constrain axes that a given rules object does not govern.
+        """
+        spec = getattr(self, logical, None)
+        if spec is None:
+            return None
+        if isinstance(spec, str):
+            spec = tuple(s.strip() for s in spec.split(",") if s.strip())
+        axes = tuple(a for a in spec if a in avail)
+        if not axes:
+            return None
+        return axes if len(axes) > 1 else axes[0]
+
+
+# ---------------------------------------------------------------------------
+# active-rules context (trace-time, thread-local)
+# ---------------------------------------------------------------------------
+
+_ACTIVE = threading.local()
+
+
+@contextmanager
+def use_rules(mesh: Mesh, rules: ShardingRules):
+    """Install ``(mesh, rules)`` as the active sharding context.
+
+    Entered inside step functions *before* the model forward so that
+    :func:`logical_constraint` calls in model code resolve against the right
+    mesh.  The context is a trace-time construct: it only needs to be live
+    while jax traces the function, not while the compiled program runs.
+    """
+    prev = getattr(_ACTIVE, "ctx", None)
+    _ACTIVE.ctx = (mesh, rules)
+    try:
+        yield (mesh, rules)
+    finally:
+        _ACTIVE.ctx = prev
+
+
+def active_rules() -> Optional[Tuple[Mesh, ShardingRules]]:
+    """The (mesh, rules) installed by :func:`use_rules`, or ``None``."""
+    return getattr(_ACTIVE, "ctx", None)
+
+
+# ---------------------------------------------------------------------------
+# spec construction helpers
+# ---------------------------------------------------------------------------
+
+
+def _axes_size(mesh: Mesh, axes: Axes) -> int:
+    if axes is None:
+        return 1
+    axes = axes if isinstance(axes, tuple) else (axes,)
+    k = 1
+    for a in axes:
+        k *= mesh.shape[a]
+    return k
+
+
+def divisible(total: int, mesh: Mesh, axes: Axes) -> bool:
+    """True when ``total`` divides evenly over the mesh axes in ``axes``
+    (``None`` trivially divides).  ``axes`` must already be resolved —
+    ``None``, a mesh-axis name, or a tuple of names."""
+    return total % _axes_size(mesh, axes) == 0
+
+
+def _flat_axes(dim: Axes) -> Tuple[str, ...]:
+    if dim is None:
+        return ()
+    return dim if isinstance(dim, tuple) else (dim,)
+
+
+def _key_str(entry) -> str:
+    """Best-effort readable name for a tree-path entry."""
+    for attr in ("key", "name", "idx"):
+        if hasattr(entry, attr):
+            return str(getattr(entry, attr))
+    return str(entry)
+
+
+class _SpecBuilder:
+    """Accumulates a PartitionSpec for one leaf with safety checks:
+    divisibility of the dim by the assigned mesh axes, and no mesh axis
+    used on two dims of the same leaf."""
+
+    def __init__(self, shape, rules: ShardingRules, mesh: Mesh, avail):
+        self.shape = tuple(shape)
+        self.rules = rules
+        self.mesh = mesh
+        self.avail = avail
+        self.dims: list = [None] * len(self.shape)
+
+    def put(self, from_end: int, logical: str):
+        """Assign ``logical``'s mesh axes to the ``from_end``-th dim counted
+        from the last (1 == last dim).  Leading scan/stack dims therefore
+        never shift the assignment."""
+        i = len(self.shape) - from_end
+        if i < 0 or self.dims[i] is not None:
+            return
+        ax = self.rules.resolve(logical, self.avail)
+        if ax is None:
+            return
+        used = {a for d in self.dims for a in _flat_axes(d)}
+        if any(a in used for a in _flat_axes(ax)):
+            return
+        if self.shape[i] % _axes_size(self.mesh, ax) != 0:
+            return
+        self.dims[i] = ax
+
+    def spec(self) -> P:
+        return P(*self.dims)
+
+
+def _dense_leaf_spec(parts, shape, rules: ShardingRules, mesh: Mesh,
+                     avail) -> P:
+    """Path-pattern spec for one dense array leaf.
+
+    Matching is on the param's dict-key path (e.g. ``layers/attn/wq``) and
+    always counts dims from the end, so scan-stacked ``[L, ...]`` leaves and
+    un-stacked leaves share one rule table.
+    """
+    b = _SpecBuilder(shape, rules, mesh, avail)
+    name = parts[-1] if parts else ""
+    in_moe = "moe" in parts
+    in_attn = "attn" in parts or "xattn" in parts
+    if name == "embedding":
+        b.put(2, "vocab")
+        b.put(1, "embed")
+    elif name == "lm_head":
+        b.put(1, "vocab")
+        b.put(2, "embed")
+    elif in_moe:
+        if name == "wi":          # [E, D, F']
+            b.put(3, "expert")
+            b.put(1, "ff")
+        elif name == "wo":        # [E, F, D]
+            b.put(3, "expert")
+            b.put(2, "ff")
+        elif name == "res_wi":    # [D, F']
+            b.put(1, "ff")
+        elif name == "res_wo":    # [F, D]
+            b.put(2, "ff")
+        # router stays replicated: tiny, and every rank routes every token
+    elif in_attn:
+        if name in ("wq", "wk", "wv", "wuq", "wuk", "wuv", "bq", "bk", "bv"):
+            b.put(1, "heads")     # projection-out (heads*hd) dim
+        elif name == "wo":        # [H*hd, D]
+            b.put(2, "heads")
+    elif name == "wi" and "mlp" in parts:
+        b.put(1, "ff")            # [D, F']
+    elif name == "wo" and "mlp" in parts:
+        b.put(2, "ff")            # [F, D]
+    # norms, biases, ssm params, rope tables: replicated
+    return b.spec()
+
+
+def param_specs(params, rules: ShardingRules, mesh: Mesh):
+    """Map a params pytree to a matching tree of ``PartitionSpec``s.
+
+    Accepts concrete arrays or ``jax.eval_shape`` output (anything with
+    ``.shape``).  Sparse layout nodes are handled explicitly:
+
+      * :class:`FixedMaskTensor` keeps its dense shape, so the dense rule
+        fires once and the *same* spec is applied to both the value and the
+        mask child — the mask/value co-sharding invariant the collectives
+        rely on;
+      * other layouts (compressed buffers) replicate every child.
+
+    The returned tree has the exact treedef of ``params`` (layout nodes are
+    rebuilt with spec children), so it is valid for ``jax.device_put`` and
+    ``jax.jit`` in/out shardings after :func:`tree_shardings`.
+    """
+    avail = set(mesh.axis_names)
+
+    def visit(path, leaf):
+        parts = [_key_str(k) for k in path]
+        if isinstance(leaf, FixedMaskTensor):
+            spec = _dense_leaf_spec(parts, leaf.shape, rules, mesh, avail)
+            return jax.tree_util.tree_map(lambda _: spec, leaf)
+        if isinstance(leaf, SparsityLayout):
+            return jax.tree_util.tree_map(lambda _: P(), leaf)
+        if leaf is None or not hasattr(leaf, "shape"):
+            return None
+        return _dense_leaf_spec(parts, leaf.shape, rules, mesh, avail)
+
+    return jax.tree_util.tree_map_with_path(
+        visit, params, is_leaf=lambda x: isinstance(x, SparsityLayout)
+    )
+
+
+def batch_spec(x, rules: ShardingRules, mesh: Mesh) -> P:
+    """Spec for one batch array: dim 0 over the data-parallel axes (when
+    divisible), everything else replicated."""
+    shape = tuple(getattr(x, "shape", ()))
+    dims = [None] * len(shape)
+    dp = rules.resolve("batch", set(mesh.axis_names))
+    if shape and dp is not None and shape[0] % _axes_size(mesh, dp) == 0:
+        dims[0] = dp
+    return P(*dims)
+
+
+def tree_shardings(specs, mesh: Mesh):
+    """Convert a tree of ``PartitionSpec``s into ``NamedSharding``s on
+    ``mesh`` (structure preserved; non-spec leaves pass through)."""
+    def to_sharding(s):
+        if isinstance(s, P):
+            return NamedSharding(mesh, s)
+        return s
+
+    return jax.tree_util.tree_map(
+        to_sharding, specs, is_leaf=lambda s: isinstance(s, P)
+    )
+
+
+# ---------------------------------------------------------------------------
+# in-model constraints
+# ---------------------------------------------------------------------------
+
+
+def logical_constraint(x, logical_axes):
+    """``with_sharding_constraint`` by logical-axis names.
+
+    ``logical_axes`` is one entry per dim of ``x``: a logical-axis name or
+    ``None``.  Resolution uses the :func:`use_rules` context; with no active
+    context (single-device smoke runs, unit tests) this is the identity, so
+    model code can sprinkle constraints unconditionally.  Dims whose size
+    does not divide the assigned mesh axes, and mesh axes already consumed
+    by an earlier dim, degrade to replicated rather than erroring.
+    """
+    ctx = active_rules()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    avail = set(mesh.axis_names)
+    dims: list = [None] * x.ndim
+    used: set = set()
+    for i, name in enumerate(logical_axes):
+        if name is None:
+            continue
+        ax = rules.resolve(name, avail)
+        if ax is None or any(a in used for a in _flat_axes(ax)):
+            continue
+        if x.shape[i] % _axes_size(mesh, ax) != 0:
+            continue
+        dims[i] = ax
+        used.update(_flat_axes(ax))
+    if not used:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*dims))
+    )

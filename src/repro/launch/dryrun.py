@@ -215,6 +215,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
             t_compile = time.time() - t0 - t_lower
             mem = compiled.memory_analysis()
             cost = compiled.cost_analysis()
+            if isinstance(cost, (list, tuple)):  # older jax: one dict per program
+                cost = cost[0] if cost else {}
             hlo = compiled.as_text()
         struct = analyze_hlo(hlo)
         coll = struct["collectives"]

@@ -133,7 +133,7 @@ _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 _NOBYTE_OPS = frozenset({
     "tuple", "get-tuple-element", "parameter", "constant", "bitcast",
     "partition-id", "replica-id", "after-all", "while", "conditional",
-    "custom-call",
+    "custom-call", "call",
 })
 
 

@@ -20,6 +20,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.dist.sharding import (
     ShardingRules,
     batch_spec,
+    divisible as _divisible,
     param_specs,
     tree_shardings,
     use_rules,
@@ -49,7 +50,15 @@ class StepConfig:
 
 def make_train_step(cfg: ModelConfig, opt: AdamWConfig, step_cfg: StepConfig,
                     mesh: Mesh, rules: ShardingRules):
-    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    """Build the jit-able train step: (params, opt_state, batch) ->
+    (params, opt_state, metrics).
+
+    The body runs under ``use_rules(mesh, rules)`` so every
+    ``logical_constraint`` in the model stack resolves against this mesh;
+    sparsity enters via ``value_and_grad_sparse`` (layout-metadata-tolerant
+    grads) and ``sparse_aware_update`` (post-optimizer re-sparsification).
+    Metrics: loss, ce, moe_aux, gnorm — all replicated scalars.
+    """
 
     def train_step(params, opt_state, batch):
         with use_rules(mesh, rules):
@@ -73,6 +82,12 @@ def make_train_step(cfg: ModelConfig, opt: AdamWConfig, step_cfg: StepConfig,
 
 def make_prefill_step(cfg: ModelConfig, step_cfg: StepConfig, mesh: Mesh,
                       rules: ShardingRules, cache_len: int):
+    """Build the prefill step: (params, batch) -> (logits, decode cache).
+
+    Runs the parallel forward under the sharding-rules context while
+    collecting per-layer K/V (and MLA latents / SSM end-states) into a
+    ``cache_len``-sized cache — the handoff point to ``make_decode_step``.
+    """
     def prefill_step(params, batch):
         with use_rules(mesh, rules):
             logits, cache = prefill(
@@ -87,6 +102,10 @@ def make_prefill_step(cfg: ModelConfig, step_cfg: StepConfig, mesh: Mesh,
 
 def make_decode_step(cfg: ModelConfig, step_cfg: StepConfig, mesh: Mesh,
                      rules: ShardingRules):
+    """Build the one-token decode step: (params, cache, token, pos) ->
+    (logits, new cache).  Donate the cache at the jit call site — it is
+    updated in place shard-by-shard under the sequence-sharded layout from
+    ``cache_specs``."""
     def decode(params, cache, token, pos):
         with use_rules(mesh, rules):
             logits, new_cache = decode_step(params, cfg, token, cache, pos)
@@ -108,16 +127,6 @@ def opt_specs(p_specs):
         "nu": p_specs,
         "step": P(),
     }
-
-
-def _divisible(total: int, mesh: Mesh, axes) -> bool:
-    if axes is None:
-        return True
-    axes = axes if isinstance(axes, tuple) else (axes,)
-    k = 1
-    for a in axes:
-        k *= mesh.shape[a]
-    return total % k == 0
 
 
 def cache_specs(cache_shapes, mesh: Mesh, rules: ShardingRules):
@@ -149,12 +158,7 @@ def cache_specs(cache_shapes, mesh: Mesh, rules: ShardingRules):
 
 
 def batch_specs(specs: dict, mesh: Mesh, rules: ShardingRules):
-    dp = rules.resolve("batch", set(mesh.axis_names))
-
-    out = {}
-    for k, v in specs.items():
-        dims = [None] * len(v.shape)
-        if len(v.shape) >= 1 and _divisible(v.shape[0], mesh, dp):
-            dims[0] = dp
-        out[k] = P(*dims)
-    return out
+    """Input-batch specs: dim 0 of every entry over the data-parallel axes
+    when divisible (the per-array rule lives in ``dist.sharding.batch_spec``;
+    this maps a whole ``input_specs`` dict)."""
+    return {k: batch_spec(v, rules, mesh) for k, v in specs.items()}

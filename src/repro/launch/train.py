@@ -59,7 +59,10 @@ def retarget_sparsity(params, sparsity: float):
         if isinstance(leaf, FixedMaskTensor):
             dense = leaf.val  # STE: pruned weights kept in val for regrowth
             mask = sp.mask(dense)
-            return FixedMaskTensor(dense * mask, mask)
+            # keep the original origin: it is static pytree aux, and changing
+            # it would desync the treedef from the optimizer moments (and
+            # force a jit retrace) on every GMP retarget
+            return FixedMaskTensor(dense * mask, mask, leaf.origin)
         return leaf
 
     return jax.tree_util.tree_map(

@@ -1,0 +1,36 @@
+"""Optional-dependency guard for hypothesis (test-only dep, see
+pyproject.toml).
+
+``hypothesis`` drives the property-based tests in test_layouts.py and
+test_sparsifiers.py but may be absent from minimal environments.  Importing
+``given``/``settings``/``st`` from here instead of from hypothesis directly
+keeps collection from hard-failing: when the real package is missing, the
+stand-ins mark each property test as skipped while every plain test in the
+same module still runs (a module-level ``pytest.importorskip`` would drop
+those too).
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    class _StrategyStub:
+        """st.<anything>(...) placeholder; never executed, only decorates."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()
+
+    def settings(*a, **k):
+        return lambda fn: fn
+
+    def given(*a, **k):
+        return lambda fn: pytest.mark.skip(
+            reason="hypothesis not installed"
+        )(fn)

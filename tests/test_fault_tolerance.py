@@ -35,6 +35,24 @@ def test_watchdog_quiet_when_uniform():
     assert w.stragglers() == []
 
 
+def test_watchdog_flags_straggler_on_two_hosts():
+    # leave-one-out reference: a 2-host fleet can still flag its straggler
+    w = StragglerWatchdog(n_hosts=2, min_steps=5)
+    for step in range(10):
+        w.observe(0, 1.0)
+        w.observe(1, 10.0)
+    assert w.stragglers() == [1]
+
+
+def test_watchdog_unwarmed_host_does_not_silence_fleet():
+    # host 2 never reports (hung); the warmed-up hosts stay monitored
+    w = StragglerWatchdog(n_hosts=3, min_steps=5)
+    for step in range(10):
+        w.observe(0, 1.0)
+        w.observe(1, 5.0)
+    assert w.stragglers() == [1]
+
+
 def test_train_kill_resume(tmp_path):
     """Train 20 steps with checkpoints, 'crash', resume to 30 — loss stream
     continues and the data pipeline picks up at the exact step."""
