@@ -1,0 +1,100 @@
+"""Paper Fig 11, serving edition: continuous-batching engine under
+synthetic Poisson traffic, dense vs n:m:g FFN weights.
+
+Drives ``repro.serve.ServeEngine`` with exponentially-distributed request
+inter-arrival times and mixed prompt lengths, then writes the side-by-side
+metrics (TTFT, p50/p99 per-token latency, throughput) to
+``BENCH_serve.json`` — the machine-readable point the perf trajectory
+tracks.
+
+    PYTHONPATH=src python -m benchmarks.fig11_serve [--quick]
+"""
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.models import init_lm
+from repro.serve import Request, SamplingParams, compare_dense_sparse
+
+NM = (1, 4, 16)
+OUT_JSON = "BENCH_serve.json"
+
+
+def poisson_requests(cfg, *, n_requests, rate_hz, prompt_lens, gen_len,
+                     seed=0):
+    """Synthetic trace: arrival gaps ~ Exp(rate), prompt lengths cycled."""
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(seed)
+    t = 0.0
+    reqs = []
+    for i in range(n_requests):
+        t += float(rng.exponential(1.0 / rate_hz))
+        plen = prompt_lens[i % len(prompt_lens)]
+        prompt = np.asarray(jax.random.randint(
+            jax.random.fold_in(key, i), (plen,), 0, cfg.vocab, jnp.int32
+        ))
+        reqs.append(Request(
+            uid=i, prompt=prompt, max_new_tokens=gen_len,
+            sampling=SamplingParams(greedy=True, seed=i), arrival_time=t,
+        ))
+    return reqs
+
+
+def main(quick=False, out_json=OUT_JSON):
+    cfg = get_smoke("bert-base-sten").scaled(dtype="float32")
+    n_requests = 8 if quick else 24
+    gen_len = 8 if quick else 16
+    prompt_lens = (16, 12, 8) if quick else (32, 24, 16)
+    rate_hz = 200.0  # arrivals far faster than decode => queueing pressure
+    max_slots = 4
+    max_seq = max(prompt_lens) + gen_len
+    ekw = dict(max_slots=max_slots, max_seq_len=max_seq)
+
+    reqs = poisson_requests(cfg, n_requests=n_requests, rate_hz=rate_hz,
+                            prompt_lens=prompt_lens, gen_len=gen_len)
+
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    # warmup=True: measure steady-state serving, not compile stalls
+    results = compare_dense_sparse(params, cfg, reqs, nm=NM,
+                                   engine_kwargs=ekw, warmup=True)
+
+    print("mode,requests,tokens,ttft_p50_ms,tok_p50_ms,tok_p99_ms,tok_s")
+    payload = {
+        "benchmark": "fig11_serve",
+        "config": {
+            "arch": "bert-base-sten(smoke)",
+            "nm": ":".join(map(str, NM)),
+            "n_requests": n_requests,
+            "gen_len": gen_len,
+            "prompt_lens": list(prompt_lens),
+            "rate_hz": rate_hz,
+            "max_slots": max_slots,
+            "quick": bool(quick),
+        },
+    }
+    for label, (outs, met) in results.items():
+        payload[label] = met.to_dict()
+        print(f"{label},{met.num_requests},{met.num_tokens},"
+              f"{met.ttft_p50 * 1e3:.1f},{met.tok_latency_p50 * 1e3:.2f},"
+              f"{met.tok_latency_p99 * 1e3:.2f},"
+              f"{met.throughput_tok_s:.1f}")
+    d, s = payload["dense"], payload["sparse"]
+    if d["tok_latency_p50"] > 0:
+        payload["sparse_over_dense_tok_p50"] = (
+            s["tok_latency_p50"] / d["tok_latency_p50"]
+        )
+    with open(out_json, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {out_json}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    main(quick=args.quick)

@@ -3,10 +3,13 @@
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
 
 Prints each benchmark's CSV block plus a trailing summary in
-``name,us_per_call,derived`` form.
+``name,us_per_call,derived`` form, and writes the same summary as
+machine-readable JSON to ``BENCH_bench.json`` (the file the perf
+trajectory ingests).
 """
 
 import argparse
+import json
 import time
 import traceback
 
@@ -16,6 +19,7 @@ from benchmarks import (
     fig9_overheads,
     fig10_gemm,
     fig11_e2e,
+    fig11_serve,
     table2_productivity,
     weak_scaling,
 )
@@ -25,17 +29,28 @@ BENCHES = [
     ("fig10_gemm", fig10_gemm.main),
     ("fig9_overheads", fig9_overheads.main),
     ("fig11_e2e", fig11_e2e.main),
+    ("fig11_serve", fig11_serve.main),
     ("fig8_finetune", fig8_finetune.main),
     ("table2_productivity", table2_productivity.main),
     ("weak_scaling", weak_scaling.main),
 ]
+
+SUMMARY_JSON = "BENCH_bench.json"
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=SUMMARY_JSON,
+                    help="summary JSON output path")
     args = ap.parse_args()
+
+    if args.only and args.only not in {n for n, _ in BENCHES}:
+        raise SystemExit(
+            f"--only {args.only!r} matches no benchmark; known: "
+            + ", ".join(n for n, _ in BENCHES)
+        )
 
     summary = []
     for name, fn in BENCHES:
@@ -54,6 +69,18 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name, secs, status in summary:
         print(f"{name},{secs * 1e6:.0f},{status}")
+
+    with open(args.json, "w") as f:
+        json.dump({
+            "benchmark": "bench",
+            "quick": bool(args.quick),
+            "results": [
+                {"name": name, "us_per_call": secs * 1e6, "derived": status}
+                for name, secs, status in summary
+            ],
+        }, f, indent=2)
+    print(f"wrote {args.json}")
+
     if any("FAIL" in s for _, _, s in summary):
         raise SystemExit(1)
 

@@ -1,6 +1,7 @@
-"""Sparse inference serving (paper Fig 11 scenario): batch-serve a model
-whose FFN weights are stored in the n:m:g layout, comparing dense vs sparse
-latency.
+"""Sparse inference serving (paper Fig 11 scenario): serve a model whose
+FFN weights are stored in the n:m:g layout, comparing dense vs sparse
+latency — first as the classic one-shot batch, then through the
+continuous-batching engine (`repro.serve`) with a queue of requests.
 
     PYTHONPATH=src python examples/sparse_serve.py [--arch bert-base-sten]
 """
@@ -21,10 +22,13 @@ def main():
             "--gen-len", "12"]
     if not args.full:
         base.append("--smoke")
-    print("== dense ==")
+    print("== one-shot: dense ==")
     serve_mod.main(base)
-    print("== n:m:g 1:4:16 ==")
+    print("== one-shot: n:m:g 1:4:16 ==")
     serve_mod.main(base + ["--sparse", "--nm", "1:4:16"])
+    print("== continuous batching: dense vs 1:4:16, 8 queued requests ==")
+    serve_mod.main(base + ["--engine", "--sparse", "--nm", "1:4:16",
+                           "--requests", "8", "--max-slots", "4"])
 
 
 if __name__ == "__main__":

@@ -1,11 +1,20 @@
-"""Batched serving loop: prefill + decode with (optionally) n:m:g sparse
-weights — the paper's sparse-inference scenario as a service loop.
+"""Serving CLI: the paper's sparse-inference scenario as a service.
 
-``python -m repro.launch.serve --arch bert-base-sten --smoke --sparse``
-runs a reduced model on CPU, converts FFN weights to GroupedNMTensor, and
-serves a batch of synthetic prompts, reporting per-token latency for dense
-vs n:m:g weights (paper Fig 11 at laptop scale; the TPU-scale numbers come
-from the dry-run roofline).
+Two modes:
+
+* one-shot (default): prefill + decode of one fixed batch, reporting
+  per-token latency for dense vs n:m:g weights (paper Fig 11 at laptop
+  scale) — kept as the reference the engine is tested token-for-token
+  against.
+* ``--engine``: the continuous-batching engine (``repro.serve``): a queue
+  of requests is served through a static slot batch with per-slot KV
+  caches, admission between decode steps, and p50/p99 per-token latency /
+  TTFT / throughput reporting.  With ``--sparse`` the same request trace
+  is served with dense and n:m:g FFN weights side by side.
+
+``python -m repro.launch.serve --arch bert-base-sten --smoke --sparse
+--engine`` runs a reduced model on CPU and serves 8 queued requests both
+ways.
 """
 
 from __future__ import annotations
@@ -18,20 +27,85 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch, get_smoke
-from repro.core.builder import SparsityBuilder
-from repro.core.layouts import GroupedNMTensor
-from repro.core.sparsifiers import GroupedNMSparsifier
 from repro.models import decode_step, init_lm, prefill
+from repro.serve import Request, SamplingParams, compare_dense_sparse
+from repro.serve.engine import ServeEngine, sparsify_for_serving, \
+    warmup_engine
+
+__all__ = ["main", "run_oneshot", "sparsify_for_serving"]
 
 
-def sparsify_for_serving(params, n=1, m=4, g=16, gr=1):
-    """Convert FFN weights to the n:m:g inference layout (paper §5.3:
-    'our sparse-dense GEMM kernel during inference')."""
-    sb = SparsityBuilder()
-    sp = GroupedNMSparsifier(n, m, g, gr, sparse_dim=0)  # [K, N] weights
-    sb.set_weight("*mlp.wi", sp, GroupedNMTensor)
-    sb.set_weight("*mlp.wo", sp, GroupedNMTensor)
-    return sb.sparsify_params(params)
+def run_oneshot(params, cfg, prompts: jnp.ndarray, gen_len: int):
+    """The original single-batch prefill + greedy decode loop.  Returns
+    (generated tokens [B, gen_len], prefill seconds, decode seconds)."""
+    B, S = prompts.shape
+    jit_decode = jax.jit(
+        lambda p, tok, cache, pos: decode_step(p, cfg, tok, cache, pos)
+    )
+
+    t0 = time.time()
+    logits, cache = prefill(params, cfg, prompts, cache_len=S + gen_len)
+    logits.block_until_ready()
+    t_prefill = time.time() - t0
+
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    out = [tok]
+    t0 = time.time()
+    for i in range(gen_len - 1):
+        logits, cache = jit_decode(params, tok, cache, jnp.asarray(S + i))
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+    return jnp.concatenate(out, axis=1), t_prefill, t_decode
+
+
+def _make_requests(key, cfg, args) -> list:
+    """A queue of synthetic requests with slightly staggered arrivals and
+    varied prompt lengths (so admission happens mid-stream)."""
+    reqs = []
+    for i in range(args.requests):
+        k = jax.random.fold_in(key, i)
+        plen = max(4, args.prompt_len - (i % 4) * 2)
+        prompt = np.asarray(
+            jax.random.randint(k, (plen,), 0, cfg.vocab, jnp.int32)
+        )
+        reqs.append(Request(
+            uid=i, prompt=prompt, max_new_tokens=args.gen_len,
+            sampling=SamplingParams(greedy=True, seed=i),
+            arrival_time=i * args.arrival_gap,
+        ))
+    return reqs
+
+
+def _run_engine(args, cfg, params, key) -> int:
+    reqs = _make_requests(key, cfg, args)
+    max_seq = args.prompt_len + args.gen_len
+    ekw = dict(max_slots=args.max_slots, max_seq_len=max_seq)
+    warm = not args.no_warmup
+    if args.sparse:
+        n, m, g = (int(v) for v in args.nm.split(":"))
+        results = compare_dense_sparse(params, cfg, reqs, nm=(n, m, g),
+                                       engine_kwargs=ekw, warmup=warm)
+        for label, (outs, met) in results.items():
+            print(met.report())
+        d = results["dense"][1]
+        s = results["sparse"][1]
+        if d.tok_latency_p50 > 0:
+            print(f"sparse/dense per-token p50 ratio: "
+                  f"{s.tok_latency_p50 / d.tok_latency_p50:.2f}")
+    else:
+        if warm:
+            warmup_engine(params, cfg, reqs, engine_kwargs=ekw)
+        eng = ServeEngine(params, cfg, **ekw)
+        outs = eng.run(reqs)
+        met = eng.metrics(label="dense")
+        print(met.report())
+        results = {"dense": (outs, met)}
+    n_served = len(next(iter(results.values()))[0])
+    print(f"served {n_served} requests through "
+          f"{args.max_slots}-slot continuous batching")
+    return 0
 
 
 def main(argv=None):
@@ -45,11 +119,28 @@ def main(argv=None):
     ap.add_argument("--nm", default="1:4:16",
                     help="n:m:g for --sparse")
     ap.add_argument("--seed", type=int, default=0)
+    # engine mode
+    ap.add_argument("--engine", action="store_true",
+                    help="serve a request queue through the "
+                         "continuous-batching engine")
+    ap.add_argument("--requests", type=int, default=8,
+                    help="queued requests in --engine mode")
+    ap.add_argument("--max-slots", type=int, default=4,
+                    help="slot-batch size in --engine mode")
+    ap.add_argument("--arrival-gap", type=float, default=0.0,
+                    help="seconds between request arrivals (--engine)")
+    ap.add_argument("--no-warmup", action="store_true",
+                    help="skip the pre-compile pass; reported latencies "
+                         "then include XLA compile stalls")
     args = ap.parse_args(argv)
 
     cfg = get_smoke(args.arch) if args.smoke else get_arch(args.arch)
     key = jax.random.PRNGKey(args.seed)
     params = init_lm(key, cfg)
+
+    if args.engine:
+        return _run_engine(args, cfg, params, key)
+
     if args.sparse:
         n, m, g = (int(v) for v in args.nm.split(":"))
         params = sparsify_for_serving(params, n, m, g)
@@ -57,27 +148,7 @@ def main(argv=None):
 
     B, S, G = args.batch, args.prompt_len, args.gen_len
     prompts = jax.random.randint(key, (B, S), 0, cfg.vocab, jnp.int32)
-
-    jit_decode = jax.jit(
-        lambda p, tok, cache, pos: decode_step(p, cfg, tok, cache, pos)
-    )
-
-    t0 = time.time()
-    logits, cache = prefill(params, cfg, prompts, cache_len=S + G)
-    logits.block_until_ready()
-    t_prefill = time.time() - t0
-
-    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-    out = [tok]
-    t0 = time.time()
-    for i in range(G - 1):
-        logits, cache = jit_decode(params, tok, cache, jnp.asarray(S + i))
-        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        out.append(tok)
-    jax.block_until_ready(tok)
-    t_decode = time.time() - t0
-
-    gen = jnp.concatenate(out, axis=1)
+    gen, t_prefill, t_decode = run_oneshot(params, cfg, prompts, G)
     print(f"prefill {S} toks x {B} batch: {t_prefill * 1e3:.1f} ms")
     print(f"decode  {G - 1} steps: {t_decode / max(1, G - 1) * 1e3:.2f} "
           f"ms/token")

@@ -7,4 +7,5 @@ from repro.models.transformer import (
     logits_of,
     loss_fn,
     prefill,
+    prefill_into_slot,
 )

@@ -28,9 +28,22 @@ __all__ = [
     "init_mla",
     "apply_mla",
     "decode_mla",
+    "pos_vec",
 ]
 
 NEG_INF = -1e30
+
+
+def pos_vec(pos, B: int) -> jnp.ndarray:
+    """Normalize a decode position to a per-batch [B] int32 vector.
+
+    Scalar ``pos`` (the classic single-sequence decode loop) broadcasts to
+    all rows; a [B] vector is passed through — the continuous-batching
+    engine drives every slot at its own position."""
+    p = jnp.asarray(pos, jnp.int32)
+    if p.ndim == 0:
+        p = jnp.broadcast_to(p[None], (B,))
+    return p
 
 
 # ---------------------------------------------------------------------------
@@ -169,7 +182,10 @@ def chunked_attention(q, k, v, *, causal: bool = True,
 def decode_attention(q, k_cache, v_cache, cache_len, *, softcap=None,
                      window: Optional[int] = None) -> jnp.ndarray:
     """Single-token decode: q [B, 1, H, hd]; caches [B, S, KV, hd];
-    cache_len [] current valid length (the new token is already written)."""
+    cache_len [] or [B] current valid length(s) (the new token is already
+    written).  A per-batch ``cache_len`` is the continuous-batching serving
+    path: every slot attends over its own prefix while sharing one
+    static-shape cache."""
     B, _, H, hd = q.shape
     S = k_cache.shape[1]
     KV = k_cache.shape[2]
@@ -180,9 +196,12 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, softcap=None,
     if softcap is not None:
         s = softcap * jnp.tanh(s / softcap)
     pos = jnp.arange(S)
-    valid = pos[None, None, None, :] < cache_len
+    cl = jnp.asarray(cache_len)
+    if cl.ndim == 1:
+        cl = cl[:, None, None, None]  # [B, 1, 1, 1] broadcast over heads/seq
+    valid = pos[None, None, None, :] < cl
     if window is not None:
-        valid &= pos[None, None, None, :] > (cache_len - 1 - window)
+        valid &= pos[None, None, None, :] > (cl - 1 - window)
     s = jnp.where(valid, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgs,bskh->bkgh", p, v_cache.astype(jnp.float32))
@@ -242,13 +261,15 @@ def apply_gqa(p, x, cfg: ModelConfig, *, is_local=False, prefix_len=0,
 
 
 def decode_gqa(p, x, cfg: ModelConfig, cache, pos, *, is_local=False):
-    """x [B, 1, D]; cache {'k','v'} [B, S, KV, hd]; pos [] int32."""
+    """x [B, 1, D]; cache {'k','v'} [B, S, KV, hd]; pos [] or [B] int32."""
     B = x.shape[0]
-    q, k, v = _qkv(p, x, cfg, pos[None].astype(jnp.int32) + jnp.zeros((B, 1), jnp.int32))
-    kc = jax.lax.dynamic_update_slice(cache["k"], k, (0, pos, 0, 0))
-    vc = jax.lax.dynamic_update_slice(cache["v"], v, (0, pos, 0, 0))
+    pv = pos_vec(pos, B)
+    q, k, v = _qkv(p, x, cfg, pv[:, None])
+    rows = jnp.arange(B)
+    kc = cache["k"].at[rows, pv].set(k[:, 0])
+    vc = cache["v"].at[rows, pv].set(v[:, 0])
     window = cfg.local_window if is_local else None
-    out = decode_attention(q, kc, vc, pos + 1, softcap=cfg.attn_softcap,
+    out = decode_attention(q, kc, vc, pv + 1, softcap=cfg.attn_softcap,
                            window=window)
     y = mm(out.reshape(B, 1, -1), p["wo"])
     return y, {"k": kc, "v": vc}
@@ -328,7 +349,8 @@ def decode_mla(p, x, cfg: ModelConfig, cache, pos, q_cache=None,
     H = cfg.n_heads
     nd, rd, vd = mla.qk_nope_head_dim, mla.qk_rope_head_dim, mla.v_head_dim
     r = mla.kv_lora_rank
-    positions = pos[None].astype(jnp.int32) + jnp.zeros((B, 1), jnp.int32)
+    pv = pos_vec(pos, B)
+    positions = pv[:, None]
 
     cq = _rms(mm(x, p["wdq"]), p["q_norm"])
     q = (mm(cq, p["wuq"])).reshape(B, 1, H, nd + rd)
@@ -340,8 +362,9 @@ def decode_mla(p, x, cfg: ModelConfig, cache, pos, q_cache=None,
                 cfg.rope_theta).reshape(B, 1, rd)
     if q_cache is not None:
         ckv_t, kr_t = q_cache(ckv_t, cfg), q_cache(kr_t, cfg)
-    ckv = jax.lax.dynamic_update_slice(cache["ckv"], ckv_t, (0, pos, 0))
-    kr = jax.lax.dynamic_update_slice(cache["kr"], kr_t, (0, pos, 0))
+    rows = jnp.arange(B)
+    ckv = cache["ckv"].at[rows, pv].set(ckv_t[:, 0])
+    kr = cache["kr"].at[rows, pv].set(kr_t[:, 0])
     ckv_r = dq_cache(ckv) if dq_cache is not None else ckv
     kr_r = dq_cache(kr) if dq_cache is not None else kr
 
@@ -354,7 +377,7 @@ def decode_mla(p, x, cfg: ModelConfig, cache, pos, q_cache=None,
                     kr_r.astype(jnp.float32))
     s *= 1.0 / math.sqrt(nd + rd)
     S = ckv.shape[1]
-    valid = jnp.arange(S)[None, None, :] < pos + 1
+    valid = jnp.arange(S)[None, None, :] < (pv + 1)[:, None, None]
     s = jnp.where(valid, s, NEG_INF)
     pattn = jax.nn.softmax(s, axis=-1)
     out_lat = jnp.einsum("bhs,bsr->bhr", pattn, ckv_r.astype(jnp.float32))

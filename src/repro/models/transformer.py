@@ -50,6 +50,7 @@ __all__ = [
     "logits_of",
     "init_cache",
     "prefill",
+    "prefill_into_slot",
     "decode_step",
 ]
 
@@ -455,35 +456,37 @@ def _decode_layer(lp, x, cfg, cache, pos, *, is_local):
 
 def _decode_gqa_at(p, x, cfg, cache, pos, *, is_local):
     """GQA decode; local layers with a window-sized cache use it as a ring
-    buffer (write at pos % S_cache)."""
+    buffer (write at pos % S_cache).  ``pos`` is a per-batch [B] vector —
+    slots in a continuous batch each write/attend at their own position."""
     B = x.shape[0]
-    positions = pos[None].astype(jnp.int32) + jnp.zeros((B, 1), jnp.int32)
-    q, k, v = attn._qkv(p, x, cfg, positions)
+    pv = attn.pos_vec(pos, B)
+    q, k, v = attn._qkv(p, x, cfg, pv[:, None])
     S_c = cache["k"].shape[1]
     ring = bool(is_local and cfg.local_window and S_c <= cfg.local_window)
-    wpos = (pos % S_c) if ring else pos
-    kc = jax.lax.dynamic_update_slice(cache["k"], _q_cache(k, cfg),
-                                      (0, wpos, 0, 0))
-    vc = jax.lax.dynamic_update_slice(cache["v"], _q_cache(v, cfg),
-                                      (0, wpos, 0, 0))
+    wpos = (pv % S_c) if ring else pv
+    rows = jnp.arange(B)
+    kc = cache["k"].at[rows, wpos].set(_q_cache(k[:, 0], cfg))
+    vc = cache["v"].at[rows, wpos].set(_q_cache(v[:, 0], cfg))
     kd, vd = _dq_cache(kc, cfg), _dq_cache(vc, cfg)
     if ring:
-        n_valid = jnp.minimum(pos + 1, S_c)
+        n_valid = jnp.minimum(pv + 1, S_c)
         out = attn.decode_attention(q, kd, vd, n_valid,
                                     softcap=cfg.attn_softcap)
     else:
         window = cfg.local_window if is_local else None
-        out = attn.decode_attention(q, kd, vd, pos + 1,
+        out = attn.decode_attention(q, kd, vd, pv + 1,
                                     softcap=cfg.attn_softcap, window=window)
     y = out.reshape(B, 1, -1) @ p["wo"]
     return y, {"k": kc, "v": vc}
 
 
 def decode_step(params, cfg: ModelConfig, token, cache, pos):
-    """token [B, 1] int32; returns (logits [B, V], new cache)."""
+    """token [B, 1] int32; pos [] or [B] int32 (per-slot positions for the
+    continuous-batching engine); returns (logits [B, V], new cache)."""
     x = jnp.take(params["embedding"], token, axis=0)
     x = x * jnp.asarray(jnp.sqrt(1.0 * cfg.d_model), x.dtype)
     x = logical_constraint(x, ("batch", None, None))
+    pos = attn.pos_vec(pos, token.shape[0])
     pair = cfg.layer_pattern == "alt_local_global"
     all_local = cfg.layer_pattern == "local"
 
@@ -505,13 +508,78 @@ def decode_step(params, cfg: ModelConfig, token, cache, pos):
     return logits, new_cache
 
 
-def prefill(params, cfg: ModelConfig, tokens, cache_len: int, *,
-            enc_embeds=None, prefix_embeds=None):
+def _to_cache_dtype(piece, dst_dtype):
+    """Cast a collected contribution to the cache dtype, quantizing when the
+    cache is int8."""
+    if dst_dtype == jnp.int8 and piece.dtype != jnp.int8:
+        piece = jnp.clip(
+            jnp.round(piece.astype(jnp.float32) / KV_QUANT_SCALE), -127, 127)
+    return piece.astype(dst_dtype)
+
+
+@functools.lru_cache(maxsize=None)
+def _seq_leaf_kinds(cfg: ModelConfig, enc_len: int):
+    """Which cache leaves carry a sequence axis: probe ``init_cache`` at
+    two lengths (shape-only, via eval_shape) and mark the leaves whose
+    shape varies.  K/V, MLA latents vary; SSM conv/ssd states and cross
+    K/V (sized by enc_len) do not.  Probe lengths are tiny so even ring
+    (window-clamped) leaves are classified as sequence leaves."""
+    probe = lambda s: jax.eval_shape(  # noqa: E731
+        lambda: init_cache(cfg, 1, s, enc_len=enc_len)
+    )
+    return jax.tree_util.tree_map(
+        lambda a, b: a.shape != b.shape, probe(2), probe(3)
+    )
+
+
+def _write_slot_leaf(dst, src, slot, offset, is_seq):
+    """Write one request's collected cache leaf into batch row ``slot``.
+
+    dst [L, B_slots, ...] is a serving cache leaf; src [L, 1, ...] the
+    corresponding prefill contribution.  Sequence leaves (K/V, MLA
+    latents) gain a seq axis in dst: the row for absolute position p is
+    ``p % S_cache``, so ring (sliding-window) caches stay aligned with the
+    decode path's ``pos % S_cache`` writes for *any* prompt length, and
+    full-size caches (S_cache >= offset + S) get the identity placement.
+    State leaves (SSM conv/ssd states, cross K/V) are overwritten
+    wholesale; ``is_seq`` comes from :func:`_seq_leaf_kinds`, not shape
+    coincidence, so a prompt that exactly fills the cache still honors
+    ``offset``."""
+    src = src[:, 0]  # [L, ...]
+    if not is_seq:  # state leaf
+        assert dst.shape[2:] == src.shape[1:], (dst.shape, src.shape)
+        return dst.at[:, slot].set(_to_cache_dtype(src, dst.dtype))
+    assert dst.ndim == src.ndim + 1 and dst.shape[3:] == src.shape[2:], (
+        dst.shape, src.shape)
+    S_c, S_src = dst.shape[2], src.shape[1]
+    take = min(S_src, S_c)  # ring caches keep the tail
+    piece = _to_cache_dtype(src[:, -take:], dst.dtype)
+    rows = (jnp.asarray(offset) + (S_src - take)
+            + jnp.arange(take, dtype=jnp.int32)) % S_c
+    return dst.at[:, slot, rows].set(piece)
+
+
+def prefill(params, cfg: ModelConfig, tokens, cache_len: int | None = None, *,
+            enc_embeds=None, prefix_embeds=None, cache=None, slot=None,
+            write_offset=0):
     """Parallel forward that also materializes the decode cache.
 
-    Returns (last-position logits [B, V], cache).  The collected per-layer
-    K/V (and MLA latents / SSM end-states / cross K-V) are written into a
-    ``cache_len``-sized cache at positions [0, S)."""
+    Returns (last-position logits [B, V], cache).  Two modes:
+
+    * ``cache_len`` given (classic): allocates a fresh ``cache_len``-sized
+      cache and writes the collected per-layer K/V (and MLA latents / SSM
+      end-states / cross K-V) at positions [0, S) for the whole batch.
+    * ``cache`` + ``slot`` given (serving): ``tokens`` is a single request
+      [1, S] and the contributions are written *into* the existing
+      static-shape slot cache at batch row ``slot``, seq offset
+      ``write_offset`` — the continuous-batching admission path.  ``slot``
+      and ``write_offset`` may be traced, so one compiled prefill serves
+      every slot.  NOTE: the contributions carry RoPE phases computed from
+      position 0 and the forward pass does not read the existing cache, so
+      a nonzero ``write_offset`` only *places* rows — prefix-continuation
+      prefill (RoPE offset + attention over cached prefix rows) is not yet
+      implemented; the engine always admits at offset 0.
+    """
     B, S = tokens.shape
     hidden, _, contribs, enc_out = forward(
         params, cfg, tokens, enc_embeds=enc_embeds,
@@ -519,7 +587,20 @@ def prefill(params, cfg: ModelConfig, tokens, cache_len: int, *,
     )
     logits = logits_of(params, cfg, hidden[:, -1:])[:, 0]
 
-    total = S + (prefix_embeds.shape[1] if prefix_embeds is not None else 0)
+    if cache is not None:
+        assert slot is not None, "slot-mode prefill needs a slot index"
+        assert B == 1, "slot-mode prefill admits one request at a time"
+        kinds = _seq_leaf_kinds(
+            cfg, enc_embeds.shape[1] if enc_embeds is not None else 0
+        )
+        cache = jax.tree_util.tree_map(
+            lambda d, s, isq: _write_slot_leaf(d, s, slot, write_offset,
+                                               isq),
+            cache, contribs, kinds,
+        )
+        return logits, cache
+
+    assert cache_len is not None, "prefill needs cache_len or cache+slot"
     enc_len = enc_embeds.shape[1] if enc_embeds is not None else 0
     cache = init_cache(cfg, B, cache_len, enc_len=enc_len)
 
@@ -529,18 +610,24 @@ def prefill(params, cfg: ModelConfig, tokens, cache_len: int, *,
         # S_cache entries; ring write positions assume S % S_cache == 0
         # (holds for the assigned shapes: 32768/524288 vs window 4096).
         if dst.shape == src.shape:
-            return src.astype(dst.dtype)
+            return _to_cache_dtype(src, dst.dtype)
         assert (dst.ndim == src.ndim and dst.shape[:2] == src.shape[:2]
                 and dst.shape[3:] == src.shape[3:]), (dst.shape, src.shape)
         take = min(src.shape[2], dst.shape[2])
         piece = src[:, :, -take:]
-        if dst.dtype == jnp.int8 and piece.dtype != jnp.int8:
-            piece = jnp.clip(
-                jnp.round(piece.astype(jnp.float32) / KV_QUANT_SCALE),
-                -127, 127)
         return jax.lax.dynamic_update_slice(
-            dst, piece.astype(dst.dtype), (0,) * dst.ndim
+            dst, _to_cache_dtype(piece, dst.dtype), (0,) * dst.ndim
         )
 
     cache = jax.tree_util.tree_map(place, cache, contribs)
     return logits, cache
+
+
+def prefill_into_slot(params, cfg: ModelConfig, tokens, cache, slot, *,
+                      write_offset=0, enc_embeds=None, prefix_embeds=None):
+    """Admit one request into a serving cache: prefill ``tokens`` [1, S] and
+    write its cache contributions into batch row ``slot`` at
+    ``write_offset``.  Returns (last-position logits [1, V], cache)."""
+    return prefill(params, cfg, tokens, enc_embeds=enc_embeds,
+                   prefix_embeds=prefix_embeds, cache=cache, slot=slot,
+                   write_offset=write_offset)

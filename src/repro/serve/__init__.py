@@ -1,0 +1,36 @@
+"""repro.serve — continuous-batching sparse serving engine (paper Fig 11
+as a service: slot-based scheduling, per-slot KV caches, dense vs n:m:g
+weights side by side)."""
+
+from repro.serve.cache import SlotKVCache, gather_slots, reset_slot
+from repro.serve.engine import (
+    ServeEngine,
+    compare_dense_sparse,
+    sparsify_for_serving,
+    warmup_engine,
+)
+from repro.serve.metrics import ServeMetrics, summarize
+from repro.serve.queue import (
+    Request,
+    RequestOutput,
+    RequestQueue,
+    SamplingParams,
+    sample_token,
+)
+
+__all__ = [
+    "ServeEngine",
+    "SlotKVCache",
+    "ServeMetrics",
+    "Request",
+    "RequestOutput",
+    "RequestQueue",
+    "SamplingParams",
+    "sample_token",
+    "summarize",
+    "sparsify_for_serving",
+    "compare_dense_sparse",
+    "warmup_engine",
+    "reset_slot",
+    "gather_slots",
+]

@@ -1,0 +1,95 @@
+"""Slot KV cache: the static-shape state behind continuous batching.
+
+JAX/XLA wants fixed shapes, so the serving cache is one
+``init_cache(cfg, max_slots, max_seq_len)`` pytree whose batch axis is a
+pool of *slots*.  A request occupies a slot from admission to completion;
+admission writes its prefill K/V into the slot via the model's
+``prefill_into_slot`` entry point, decode advances every slot at its own
+position (``decode_step`` with a per-slot position vector), and freed
+slots are simply overwritten by the next admission.  ``decode_attention``
+masks each slot to its own valid prefix, so stale tail entries are never
+read.
+
+``reset_slot`` (explicit zeroing, useful for tests/debugging) and
+``gather_slots`` (compaction: reorder live slots to the front, e.g. before
+shrinking the pool) are jitted pure updates of the cache pytree.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import init_cache, prefill_into_slot
+from repro.models.common import ModelConfig
+
+__all__ = ["SlotKVCache", "reset_slot", "gather_slots"]
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_slot_prefill(cfg: ModelConfig):
+    """One jitted slot-prefill per config, shared across caches; jit then
+    specializes per (prompt length, param structure).  The cache operand is
+    donated: admission updates the slot pool in place instead of copying
+    the whole [max_slots, max_seq_len] pytree."""
+    return jax.jit(
+        lambda p, toks, cache, slot, off: prefill_into_slot(
+            p, cfg, toks, cache, slot, write_offset=off
+        ),
+        donate_argnums=(2,),
+    )
+
+
+@jax.jit
+def reset_slot(cache, slot):
+    """Zero batch row ``slot`` of every cache leaf."""
+    return jax.tree_util.tree_map(
+        lambda l: l.at[:, slot].set(jnp.zeros((), l.dtype)), cache
+    )
+
+
+@jax.jit
+def gather_slots(cache, perm):
+    """Reorder the slot axis by ``perm`` (int32 [max_slots]) — slot
+    compaction.  Row i of the result is old row perm[i]."""
+    return jax.tree_util.tree_map(lambda l: l[:, perm], cache)
+
+
+class SlotKVCache:
+    """Owns the slot-pool cache pytree plus per-slot host bookkeeping."""
+
+    def __init__(self, cfg: ModelConfig, max_slots: int, max_seq_len: int,
+                 *, enc_len: int = 0):
+        self.cfg = cfg
+        self.max_slots = max_slots
+        self.max_seq_len = max_seq_len
+        self.data: Any = init_cache(cfg, max_slots, max_seq_len,
+                                    enc_len=enc_len)
+        # one compiled slot-prefill per distinct prompt length (prompts are
+        # not padded: padding would write pad-token K/V into the slot)
+        self._prefill_jit = _jit_slot_prefill(cfg)
+
+    def write_prefill(self, params, tokens, slot: int, *,
+                      write_offset: int = 0):
+        """Admit one request: prefill ``tokens`` [1, S] into ``slot`` at
+        seq offset ``write_offset``.  Returns the last-position logits
+        [1, V]."""
+        assert tokens.ndim == 2 and tokens.shape[0] == 1
+        assert tokens.shape[1] <= self.max_seq_len, (
+            f"prompt ({tokens.shape[1]}) exceeds max_seq_len "
+            f"({self.max_seq_len})"
+        )
+        logits, self.data = self._prefill_jit(
+            params, tokens, self.data, jnp.asarray(slot, jnp.int32),
+            jnp.asarray(write_offset, jnp.int32),
+        )
+        return logits
+
+    def reset(self, slot: int) -> None:
+        self.data = reset_slot(self.data, jnp.asarray(slot, jnp.int32))
+
+    def compact(self, perm) -> None:
+        self.data = gather_slots(self.data, jnp.asarray(perm, jnp.int32))

@@ -1,0 +1,87 @@
+"""Serving metrics: TTFT, per-token latency percentiles, throughput.
+
+Aggregates the timestamps each :class:`~repro.serve.queue.RequestOutput`
+carries into the numbers a serving benchmark reports (p50/p99 per-token
+latency, time-to-first-token, tok/s), and exports them as JSON for the
+benchmark trajectory (``BENCH_serve.json``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Iterable, Optional
+
+import numpy as np
+
+__all__ = ["ServeMetrics", "summarize"]
+
+
+def _pct(xs, q) -> float:
+    return float(np.percentile(np.asarray(xs, np.float64), q)) if len(xs) \
+        else float("nan")
+
+
+@dataclasses.dataclass
+class ServeMetrics:
+    """Summary statistics over a set of finished requests (seconds)."""
+
+    label: str
+    num_requests: int
+    num_tokens: int
+    wall_time: float
+    ttft_p50: float
+    ttft_p99: float
+    tok_latency_p50: float
+    tok_latency_p99: float
+    request_latency_p50: float
+    throughput_tok_s: float
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def dump_json(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_dict(), f, indent=2)
+
+    def report(self) -> str:
+        ms = 1e3
+        return (
+            f"[{self.label}] {self.num_requests} requests, "
+            f"{self.num_tokens} tokens in {self.wall_time:.2f}s | "
+            f"ttft p50/p99 {self.ttft_p50 * ms:.1f}/"
+            f"{self.ttft_p99 * ms:.1f} ms | "
+            f"per-token p50/p99 {self.tok_latency_p50 * ms:.2f}/"
+            f"{self.tok_latency_p99 * ms:.2f} ms | "
+            f"{self.throughput_tok_s:.1f} tok/s"
+        )
+
+
+def summarize(outputs: Iterable, wall_time: float, *,
+              label: str = "serve") -> ServeMetrics:
+    """Fold finished requests into a :class:`ServeMetrics`.
+
+    Per-token latency is the gap between consecutive token timestamps
+    within each request (the decode cadence a user of that stream sees);
+    TTFT is first-token time minus arrival."""
+    outputs = list(outputs)
+    ttfts, gaps, req_lat = [], [], []
+    n_tok = 0
+    for o in outputs:
+        n_tok += len(o.tokens)
+        ttfts.append(o.ttft)
+        req_lat.append(o.latency)
+        ts = o.token_times
+        gaps.extend(b - a for a, b in zip(ts[:-1], ts[1:]))
+    return ServeMetrics(
+        label=label,
+        num_requests=len(outputs),
+        num_tokens=n_tok,
+        wall_time=wall_time,
+        ttft_p50=_pct(ttfts, 50),
+        ttft_p99=_pct(ttfts, 99),
+        tok_latency_p50=_pct(gaps, 50),
+        tok_latency_p99=_pct(gaps, 99),
+        request_latency_p50=_pct(req_lat, 50),
+        throughput_tok_s=n_tok / max(wall_time, 1e-9),
+    )

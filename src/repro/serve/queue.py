@@ -1,0 +1,129 @@
+"""Request/response plumbing for the continuous-batching serving engine.
+
+A :class:`Request` carries a prompt, per-request sampling parameters and
+stop conditions; the :class:`RequestQueue` is the arrival side of the
+engine (requests become visible once their ``arrival_time`` has passed,
+which is how the benchmarks model Poisson traffic).  A finished request is
+returned as a :class:`RequestOutput` with the wall-clock timestamps the
+metrics layer aggregates into TTFT / per-token latency / throughput.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+__all__ = ["SamplingParams", "Request", "RequestOutput", "RequestQueue",
+           "sample_token"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decoding parameters.
+
+    ``greedy`` overrides everything else; otherwise softmax sampling at
+    ``temperature`` restricted to the ``top_k`` highest logits
+    (``top_k=0`` means the full vocabulary).  ``seed`` makes a request's
+    sampling stream reproducible independent of scheduling order.
+    """
+
+    greedy: bool = True
+    temperature: float = 1.0
+    top_k: int = 0
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request: prompt tokens plus generation/stop settings."""
+
+    uid: int
+    prompt: np.ndarray                 # [S] int32 token ids
+    max_new_tokens: int = 16
+    sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
+    stop_tokens: tuple = ()            # any of these ends generation
+    arrival_time: float = 0.0          # seconds after engine start
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        assert self.prompt.size > 0, "empty prompt"
+        assert self.max_new_tokens >= 1
+
+
+@dataclasses.dataclass
+class RequestOutput:
+    """A finished request with its generation and latency timestamps.
+
+    ``token_times`` holds one wall-clock stamp per generated token (the
+    first entry is the end of prefill, i.e. time-to-first-token)."""
+
+    uid: int
+    prompt_len: int
+    tokens: list
+    finish_reason: str                 # "length" | "stop"
+    arrival_time: float
+    admitted_time: float
+    finish_time: float
+    token_times: list
+
+    @property
+    def ttft(self) -> float:
+        return self.token_times[0] - self.arrival_time
+
+    @property
+    def latency(self) -> float:
+        return self.finish_time - self.arrival_time
+
+
+class RequestQueue:
+    """Arrival queue with simulated arrival times.
+
+    ``pop_ready(now)`` hands out the earliest-submitted request whose
+    ``arrival_time`` has passed (submission order need not match arrival
+    order); ``next_arrival()`` lets the engine idle-wait precisely when
+    every slot is free but traffic is still due."""
+
+    def __init__(self):
+        self._q: deque[Request] = deque()
+
+    def push(self, req: Request) -> None:
+        self._q.append(req)
+
+    def pop_ready(self, now: float) -> Optional[Request]:
+        # requests may be submitted out of arrival order; scan for the
+        # first due one (queues are engine-sized, so O(n) is fine)
+        for i, req in enumerate(self._q):
+            if req.arrival_time <= now:
+                del self._q[i]
+                return req
+        return None
+
+    def next_arrival(self) -> Optional[float]:
+        return min(r.arrival_time for r in self._q) if self._q else None
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+
+def sample_token(logits: np.ndarray, sampling: SamplingParams,
+                 rng: np.random.Generator) -> int:
+    """Sample one token id from a [V] logits row on the host.
+
+    Host-side sampling keeps per-request RNG streams independent of batch
+    composition — a slot's output never depends on which other requests
+    happen to share the batch."""
+    logits = np.asarray(logits, np.float32)
+    if sampling.greedy:
+        return int(np.argmax(logits))
+    t = max(sampling.temperature, 1e-5)
+    z = logits / t
+    if sampling.top_k and sampling.top_k < z.size:
+        kth = np.partition(z, -sampling.top_k)[-sampling.top_k]
+        z = np.where(z >= kth, z, -np.inf)
+    z = z - np.max(z)
+    p = np.exp(z)
+    p /= p.sum()
+    return int(rng.choice(z.size, p=p))
