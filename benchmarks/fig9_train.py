@@ -1,0 +1,118 @@
+"""Paper Fig 9, trainer edition: per-step wall time of the device-resident
+multi-step trainer (launch/train.py::make_multi_step) — dense vs
+fixed-pattern masked training vs GMP recompute-cadence training.
+
+Unlike fig9_overheads.py (which times one hand-rolled jitted step), this
+drives the production trainer itself: ``--log-every``-sized ``lax.scan``
+chunks, in-jit ``lax.cond`` GMP pattern recomputes, on-device metrics.  The
+gap between ``sparse-fixed`` and ``sparse-recompute-every-N`` is the cost
+of 'new' vs 'fixed' sparsification amortized over the cadence (paper Fig 9)
+— now paid inside jit instead of as a host-sync stall.
+
+    PYTHONPATH=src python -m benchmarks.fig9_train [--quick]
+
+Writes ``BENCH_train.json`` (one entry per variant, ms/step + derived
+overhead vs dense) for the perf trajectory.
+"""
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke
+from repro.data import DataConfig, SyntheticLMPipeline
+from repro.launch.train import (
+    build_sparse_params,
+    make_multi_step,
+    stack_batches,
+)
+from repro.models import init_lm
+from repro.optim import AdamWConfig, GMPSchedule, adamw_init
+
+OUT_JSON = "BENCH_train.json"
+
+
+def _bench_variant(cfg, params, gmp, n_inner, data, repeats):
+    opt_cfg = AdamWConfig(lr=1e-4)
+    state = adamw_init(params)
+    multi = make_multi_step(cfg, opt_cfg, gmp, n_inner)
+
+    def batches(lo):
+        return stack_batches(data, lo, lo + n_inner)
+
+    stop = jnp.int32(n_inner * (repeats + 1))
+    # warm-up chunk (compile); donation consumes buffers, so thread them
+    params, state, m = multi(params, state, batches(0), jnp.int32(0), stop)
+    jax.block_until_ready(m["loss"])
+    ts = []
+    step = n_inner
+    for _ in range(repeats):
+        b = batches(step)
+        t0 = time.perf_counter()
+        params, state, m = multi(params, state, b, jnp.int32(step), stop)
+        jax.block_until_ready(m["loss"])
+        ts.append((time.perf_counter() - t0) / n_inner)
+        step += n_inner
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def main(quick=False, out_json=OUT_JSON):
+    cfg = get_smoke("bert-base-sten")
+    if not quick:
+        cfg = cfg.scaled(d_model=128, d_ff=512, n_layers=4, n_heads=8,
+                         head_dim=16, vocab=2048)
+    n_inner = 4 if quick else 10
+    repeats = 3 if quick else 5
+    key = jax.random.PRNGKey(0)
+    data = SyntheticLMPipeline(DataConfig(
+        vocab=cfg.vocab, seq_len=64 if quick else 128,
+        global_batch=4 if quick else 8, seed=0,
+    ))
+
+    # recompute-cadence schedules: a pattern recompute every N in-jit steps
+    cadences = (2,) if quick else (2, 8)
+    horizon = n_inner * (repeats + 1)
+
+    variants = [("dense", init_lm(key, cfg), None)]
+    sp_params = build_sparse_params(init_lm(key, cfg), 0.75)
+    variants.append(("sparse-fixed", sp_params, None))
+    for every in cadences:
+        gmp = GMPSchedule(mode="iterative", target_sparsity=0.75,
+                          begin_step=0, end_step=horizon,
+                          recompute_every=every, num_layers=cfg.n_layers)
+        variants.append((f"sparse-recompute-every-{every}",
+                         build_sparse_params(init_lm(key, cfg),
+                                             gmp.sparsity_at(0)), gmp))
+
+    print("variant,ms_per_step,overhead_vs_dense")
+    results = []
+    t_dense = None
+    for name, params, gmp in variants:
+        t = _bench_variant(cfg, params, gmp, n_inner, data, repeats)
+        if t_dense is None:
+            t_dense = t
+        over = (t / t_dense - 1.0) * 100.0
+        print(f"{name},{t * 1e3:.2f}ms,{over:.0f}%")
+        results.append({
+            "name": name,
+            "us_per_call": t * 1e6,
+            "derived": f"overhead_vs_dense={over:.1f}%",
+        })
+
+    payload = {"benchmark": "train", "quick": bool(quick),
+               "n_inner": n_inner, "results": results}
+    with open(out_json, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {out_json}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default=OUT_JSON)
+    args = ap.parse_args()
+    main(quick=args.quick, out_json=args.json)

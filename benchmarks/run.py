@@ -17,6 +17,7 @@ from benchmarks import (
     fig7_energy,
     fig8_finetune,
     fig9_overheads,
+    fig9_train,
     fig10_gemm,
     fig11_e2e,
     fig11_serve,
@@ -28,6 +29,7 @@ BENCHES = [
     ("fig7_energy", fig7_energy.main),
     ("fig10_gemm", fig10_gemm.main),
     ("fig9_overheads", fig9_overheads.main),
+    ("fig9_train", fig9_train.main),
     ("fig11_e2e", fig11_e2e.main),
     ("fig11_serve", fig11_serve.main),
     ("fig8_finetune", fig8_finetune.main),

@@ -88,13 +88,25 @@ def sparsify_grads(grads, grad_formats: dict[str, OutFormat],
             if fnmatch.fnmatch(name, pattern):
                 if fmt is None or isinstance(fmt.external, KeepAll):
                     return g
-                dense = g.to_dense() if isinstance(g, SparsityLayout) else g
+                if isinstance(g, FixedMaskTensor) and g.mask is None:
+                    # cotangent from value_and_grad_sparse: integer/bool
+                    # metadata carries float0 -> None; the val leaf already
+                    # holds the dense-space gradient (chain rule through
+                    # to_dense applied the mask)
+                    dense = g.val
+                elif isinstance(g, SparsityLayout):
+                    dense = g.to_dense()
+                else:
+                    dense = g
                 out = apply_sparsifier(fmt.external, dense, fmt.out_layout,
                                        key=key)
-                # keep pytree structure: return masked dense values
+                # keep pytree structure: return masked dense values.  The
+                # static ``origin`` aux must ride along — dropping it would
+                # desync the cotangent treedef from the primal params (the
+                # optimizer flattens grads with the params' treedef).
                 masked = out.to_dense() if isinstance(out, SparsityLayout) else out
                 if isinstance(g, FixedMaskTensor):
-                    return FixedMaskTensor(masked, g.mask)
+                    return FixedMaskTensor(masked, g.mask, g.origin)
                 return masked
         return g
 

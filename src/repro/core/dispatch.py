@@ -91,8 +91,10 @@ def register_op_impl(op, inp: Sequence[type], out: type | None = None,
     """
     op_name = _canonical_name(op)
     if callable(op) and op_name not in _DENSE_OPS:
-        # remember a dense reference if the registered symbol is the dense op
-        pass
+        # the registered symbol doubles as the dense reference: signatures
+        # with no sparse implementation nor conversion path fall back to it
+        # (with a SparseFallbackWarning) instead of raising
+        register_dense_reference(op_name, op)
 
     def deco(fn):
         key = (op_name, tuple(inp), inline)
@@ -217,7 +219,10 @@ def dispatch(op, *args, inline: Optional[Sparsifier] = None,
             f"no sparse implementation nor dense fallback for op {op_name!r} "
             f"with signature {[c.__name__ for c in sig]}"
         )
-    if any(isinstance(a, SparsityLayout) for a in args):
+    if any(isinstance(a, SparsityLayout) and not isinstance(a, DenseTensor)
+           for a in args):
+        # DenseTensor wrappers densify for free — only warn when a *sparse*
+        # layout is about to be materialized
         warnings.warn(
             f"sten: falling back to dense implementation of {op_name!r} for "
             f"signature {[c.__name__ for c in sig]}",

@@ -65,11 +65,30 @@ def energy(x_hat, x) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 
 
-def unstructured_mask(x, sparsity: float) -> jnp.ndarray:
-    """Global magnitude top-k mask (scalar fraction sparsifier, Table 1)."""
+def unstructured_mask(x, sparsity) -> jnp.ndarray:
+    """Global magnitude top-k mask (scalar fraction sparsifier, Table 1).
+
+    ``sparsity`` may be a Python float (static k via top_k) or a traced
+    scalar (the in-jit GMP ramp).  Both spellings derive k with the same
+    f32 operation sequence and keep ``|x| >= (k-th largest |x|)``, so they
+    select bitwise-identical masks for the same sparsity level.
+    """
     flat = jnp.abs(x).reshape(-1)
-    k = max(1, int(round(flat.shape[0] * (1.0 - sparsity))))
-    thresh = jax.lax.top_k(flat, k)[0][-1]
+    size = flat.shape[0]
+    if isinstance(sparsity, (float, int)):
+        k = int(np.clip(np.round(
+            np.float32(size) * (np.float32(1.0) - np.float32(sparsity))
+        ), 1, size))
+        thresh = jax.lax.top_k(flat, k)[0][-1]
+    else:
+        k = jnp.clip(
+            jnp.round(
+                jnp.float32(size)
+                * (jnp.float32(1.0) - jnp.asarray(sparsity, jnp.float32))
+            ).astype(jnp.int32),
+            1, size,
+        )
+        thresh = jnp.sort(flat)[size - k]
     return (jnp.abs(x) >= thresh).astype(x.dtype)
 
 

@@ -217,7 +217,7 @@ class SameFormatSparsifier(Sparsifier):
             ranks = jnp.zeros_like(order).at[order].set(
                 jnp.arange(order.shape[0]))
             mask = (ranks < k).reshape(new_dense.shape)
-            return FixedMaskTensor(new_dense * mask, mask)
+            return FixedMaskTensor(new_dense * mask, mask, ref.origin)
         if isinstance(ref, GroupedNMTensor):
             if self.fixed_pattern:
                 return _regather_grouped_nm(ref, new_dense)

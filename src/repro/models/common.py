@@ -20,21 +20,41 @@ __all__ = ["MoEConfig", "MLAConfig", "SSMConfig", "ModelConfig", "dense_init",
            "mm"]
 
 
-def mm(x, w):
+def mm(x, w, *, inline=None):
     """Weight application admitting sparse layouts (the paper's technique
     integrates here: FixedMaskTensor during masked training, GroupedNMTensor
-    for sparse serving — dispatched through the sten registry)."""
-    from repro.core.layouts import SparsityLayout
+    for sparse serving — dispatched through the sten registry, so the same
+    registered kernels back training forwards and serving).
 
+    ``inline`` (optional) is a streaming sparsifier fused into the matmul
+    when a fused implementation is registered (paper §3.3 — e.g.
+    ``ScalarThresholdSparsifier`` hits ``matmul_threshold_pallas``); the
+    produced intermediate is returned masked-dense so surrounding model code
+    stays dense.
+    """
+    from repro.core.layouts import DenseTensor, SparsityLayout
+
+    if not isinstance(w, SparsityLayout) and inline is None:
+        return x @ w
+
+    from repro.core import ops as sten_ops
+
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
     if isinstance(w, SparsityLayout):
-        from repro.core import ops as sten_ops
-
-        lead = x.shape[:-1]
-        y = sten_ops.linear(x.reshape(-1, x.shape[-1]), w)
-        if hasattr(y, "to_dense"):
-            y = y.to_dense()
-        return y.reshape(*lead, -1)
-    return x @ w
+        # layout signature dispatch: FixedMask -> masked matmul impl,
+        # GroupedNM -> nmg_spmm/nmg_linear — the weight is never densified
+        # here; only registered impls decide its representation
+        y = sten_ops.linear(x2, w, inline=inline)
+    else:
+        # dense weight + inline sparsifier: wrap operands so dispatch sees
+        # DenseTensor signatures and can pick the fused kernel
+        y = sten_ops.matmul(DenseTensor(x2), DenseTensor(w), inline=inline)
+    if isinstance(y, SparsityLayout):
+        y = y.to_dense()
+    # match the dense path's promotion semantics (x @ w), so sparsifying a
+    # weight never changes a layer's output dtype
+    return y.astype(jnp.result_type(x.dtype, w.dtype)).reshape(*lead, -1)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -115,6 +135,10 @@ class ModelConfig:
     dtype: str = "bfloat16"
     # paper integration: which weights the sparsity plan targets by default
     sparse_targets: tuple = ("mlp.wi", "mlp.wo", "attn.wo")
+    # fused inline sparsifier (paper §3.3): when set, the MLP up-projection
+    # runs through the fused matmul+threshold kernel and the produced
+    # intermediate is thresholded in-stream (kernels/fused_sparse_matmul.py)
+    mlp_inline_threshold: Optional[float] = None
 
     @property
     def hd(self) -> int:

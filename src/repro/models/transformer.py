@@ -192,7 +192,7 @@ def _cross_attn(p, x, enc_out, cfg):
     out = attn.chunked_attention(q, k, v, causal=False,
                                  chunk_q=cfg.attn_chunk_q,
                                  chunk_k=cfg.attn_chunk_k)
-    return out.reshape(B, S, -1) @ p["wo"], (k, v)
+    return _mm(out.reshape(B, S, -1), p["wo"]), (k, v)
 
 
 def _cross_attn_cached(p, x, xk, xv, cfg):
@@ -202,7 +202,7 @@ def _cross_attn_cached(p, x, xk, xv, cfg):
     out = attn.chunked_attention(q, xk, xv, causal=False,
                                  chunk_q=cfg.attn_chunk_q,
                                  chunk_k=cfg.attn_chunk_k)
-    return out.reshape(B, S, -1) @ p["wo"]
+    return _mm(out.reshape(B, S, -1), p["wo"])
 
 
 def _sublayer_ffn(lp, x, cfg):
@@ -214,7 +214,11 @@ def _sublayer_ffn(lp, x, cfg):
         else:
             f, aux = moe_mod.apply_moe(lp["moe"], h, cfg)
     elif "mlp" in lp:
-        hh = _mm(h, lp["mlp"]["wi"])
+        inline = None
+        if cfg.mlp_inline_threshold is not None:
+            from repro.core.sparsifiers import ScalarThresholdSparsifier
+            inline = ScalarThresholdSparsifier(cfg.mlp_inline_threshold)
+        hh = _mm(h, lp["mlp"]["wi"], inline=inline)
         if cfg.gated_mlp:
             u, v = jnp.split(hh, 2, axis=-1)
             hh = _act(cfg.act)(u) * v
@@ -476,7 +480,7 @@ def _decode_gqa_at(p, x, cfg, cache, pos, *, is_local):
         window = cfg.local_window if is_local else None
         out = attn.decode_attention(q, kd, vd, pv + 1,
                                     softcap=cfg.attn_softcap, window=window)
-    y = out.reshape(B, 1, -1) @ p["wo"]
+    y = _mm(out.reshape(B, 1, -1), p["wo"])
     return y, {"k": kc, "v": vc}
 
 

@@ -23,20 +23,41 @@ from repro.core.layouts import (
     NMTensor,
     SparsityLayout,
 )
-from repro.core.sparsifiers import SameFormatSparsifier
+from repro.core.sparsifiers import (
+    SameFormatSparsifier,
+    ScalarFractionSparsifier,
+)
 from repro.core.autograd import sparsify_grads
 
 __all__ = ["resparsify_params", "sparse_aware_update"]
 
 
-def resparsify_params(params, *, recompute_pattern: bool = False):
-    """Apply SameFormatSparsifier to every sparse-layout leaf."""
+def resparsify_params(params, *, recompute_pattern: bool = False,
+                      target_sparsity=None):
+    """Apply SameFormatSparsifier to every sparse-layout leaf.
+
+    ``target_sparsity`` (optional, may be a traced scalar — the in-jit GMP
+    ramp) overrides the recompute density for FixedMask leaves whose origin
+    is a ``ScalarFractionSparsifier`` (or unrecorded): the pattern is
+    recomputed by global magnitude at that sparsity instead of the origin's
+    build-time fraction.  Every other origin (n:m / n:m:g, block-wise,
+    random) keeps its native recompute — its pattern structure is a format
+    property, not a schedule knob.
+    """
     sp = SameFormatSparsifier(fixed_pattern=not recompute_pattern)
 
     def visit(leaf):
         if isinstance(leaf, FixedMaskTensor) and recompute_pattern:
             # recompute sees the RAW value buffer (STE regrowth: pruned
             # weights keep receiving updates and may re-enter the mask)
+            if target_sparsity is not None and (
+                    leaf.origin is None
+                    or isinstance(leaf.origin, ScalarFractionSparsifier)):
+                from repro.core import nmg
+                mask = nmg.unstructured_mask(
+                    leaf.val, target_sparsity
+                ).astype(jnp.bool_)
+                return FixedMaskTensor(leaf.val * mask, mask, leaf.origin)
             return sp.resparsify(leaf, leaf.val)
         if isinstance(leaf, GroupedNMTensor) and leaf.val.ndim == 4:
             # scan-stacked [L, ...] layout: regather per layer
@@ -55,7 +76,7 @@ def resparsify_params(params, *, recompute_pattern: bool = False):
 
 def sparse_aware_update(update_fn, grads, state, params, *,
                         grad_formats: Optional[dict] = None,
-                        recompute_pattern=False, **kw):
+                        recompute_pattern=False, target_sparsity=None, **kw):
     """Optimizer update + STen semantics:
 
     1. sparsify gradients per the builder's grad formats (paper §3.4
@@ -65,19 +86,27 @@ def sparse_aware_update(update_fn, grads, state, params, *,
        default, recomputed when the sparsification schedule triggers.
 
     ``recompute_pattern`` may be a Python bool or a traced bool; the traced
-    case uses lax.cond over the two re-sparsification paths.
+    case uses lax.cond over the two re-sparsification paths, which is how
+    the jitted multi-step trainer (launch/train.py) runs GMP pattern
+    recomputes fully on device.  ``target_sparsity`` (static or traced)
+    sets the recompute density for unstructured FixedMask params — the
+    GMP ramp's current level.
     """
     if grad_formats:
         grads = sparsify_grads(grads, grad_formats)
     new_params, new_state, metrics = update_fn(grads, state, params, **kw)
     if isinstance(recompute_pattern, bool):
         new_params = resparsify_params(
-            new_params, recompute_pattern=recompute_pattern
+            new_params, recompute_pattern=recompute_pattern,
+            target_sparsity=target_sparsity if recompute_pattern else None,
         )
     else:
+        tgt = (jnp.asarray(target_sparsity, jnp.float32)
+               if target_sparsity is not None else None)
         new_params = jax.lax.cond(
             recompute_pattern,
-            lambda p: resparsify_params(p, recompute_pattern=True),
+            lambda p: resparsify_params(p, recompute_pattern=True,
+                                        target_sparsity=tgt),
             lambda p: resparsify_params(p, recompute_pattern=False),
             new_params,
         )

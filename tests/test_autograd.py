@@ -56,6 +56,30 @@ def test_masked_grad_convention():
     assert float(out.sum()) == 4.0
 
 
+def test_sparsify_grads_preserves_origin_treedef():
+    """Grad-format round trip: the cotangent treedef (including the static
+    ``origin`` aux) must keep mirroring the primal params, or the optimizer's
+    flatten-by-params-treedef desyncs (regression: origin was dropped)."""
+    x = jax.random.normal(KEY, (8, 8))
+    w = apply_sparsifier(ScalarFractionSparsifier(0.5), x, FixedMaskTensor)
+    assert w.origin is not None
+    params = {"w": w}
+    _, grads = value_and_grad_sparse(
+        lambda p: jnp.sum(p["w"].to_dense() ** 2))(params)
+    fmts = {"w": OutFormat(KeepAll(), None,
+                           ScalarFractionSparsifier(0.75), FixedMaskTensor)}
+    out = sparsify_grads(grads, fmts)
+    assert out["w"].origin is w.origin
+    # the round trip leaves the cotangent treedef untouched ...
+    assert (jax.tree_util.tree_structure(out)
+            == jax.tree_util.tree_structure(grads))
+    # ... so the optimizer's flatten-by-params-treedef still accepts it
+    # (this raises on origin-aux desync — the regression)
+    treedef = jax.tree_util.tree_structure(params)
+    flat = treedef.flatten_up_to(out)
+    assert len(flat) == len(jax.tree_util.tree_leaves(params))
+
+
 def test_sparsify_grads_by_format():
     """Paper §3.4 set_weight_grad: named gradients re-sparsified before the
     optimizer."""

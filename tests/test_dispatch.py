@@ -195,6 +195,39 @@ def test_extensibility_paper_example():
     np.testing.assert_allclose(np.asarray(z), np.maximum(d, 0), rtol=1e-6)
 
 
+def test_register_op_impl_records_dense_reference():
+    """Registering an impl under a callable op records that callable as the
+    dense reference, so signatures with no sparse impl (and no conversion
+    path) fall back to it instead of raising (regression: the branch was
+    dead and the fallback raised NotImplementedError)."""
+    from repro.core.dispatch import dispatch, register_op_impl
+    from repro.core.layouts import GroupedNMTensor
+
+    def triple_ref_op(x):
+        return x * 3.0
+
+    @register_op_impl(triple_ref_op, inp=(GroupedNMTensor,))
+    def _nmg_triple(a):  # pragma: no cover - never reached in this test
+        return a.to_dense() * 3.0
+
+    # CSR cannot losslessly become GroupedNM, so the only route is the
+    # dense reference recorded at registration time (with a warning)
+    a = sparse(jax.random.normal(KEY, (4, 4)))
+    with pytest.warns(SparseFallbackWarning):
+        out = dispatch("triple_ref_op", a)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(a.to_dense() * 3.0), rtol=1e-6)
+
+
+def test_dense_tensor_wrappers_do_not_warn_on_fallback():
+    """Densifying a DenseTensor wrapper costs nothing — no fallback warning
+    (mm's fused-inline path wraps dense operands to reach fused impls)."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", SparseFallbackWarning)
+        out = sten.relu(DenseTensor(jnp.asarray([-1.0, 2.0])))
+    np.testing.assert_allclose(np.asarray(out), [0.0, 2.0])
+
+
 def test_find_impl_prefers_fewest_conversions():
     impl, sig = _find_impl("matmul", (CsrTensor, DenseTensor), None)
     assert impl is not None and sig is None  # exact match, no conversion

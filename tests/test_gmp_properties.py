@@ -1,0 +1,89 @@
+"""Property tests for GMP schedules (optim/gmp.py).
+
+Invariants every schedule must satisfy, regardless of parameters:
+monotone sparsity on the ramp, exact target by end_step, a pattern
+recompute at (or before) the moment the ramp tops out — including
+non-divisible cadence spans (regression for the end_step bug) — full layer
+coverage by end_step, and host/traced spelling agreement.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import GMPSchedule, gmp_sparsity
+
+from tests._hypothesis_compat import given, settings, st
+
+schedules = st.builds(
+    GMPSchedule,
+    mode=st.sampled_from(["one_shot", "iterative", "layer_wise"]),
+    target_sparsity=st.floats(0.05, 0.95),
+    begin_step=st.integers(0, 50),
+    end_step=st.integers(51, 400),
+    recompute_every=st.integers(1, 60),
+    num_layers=st.integers(1, 24),
+)
+
+
+@settings(deadline=None, max_examples=50)
+@given(schedules)
+def test_sparsity_monotone_on_ramp(s):
+    vals = [gmp_sparsity(s, t) for t in range(0, s.end_step + 20)]
+    assert all(b >= a - 1e-12 for a, b in zip(vals, vals[1:]))
+
+
+@settings(deadline=None, max_examples=50)
+@given(schedules)
+def test_reaches_exact_target_by_end_step(s):
+    assert gmp_sparsity(s, s.end_step) == pytest.approx(s.target_sparsity)
+    assert gmp_sparsity(s, s.end_step + 123) == pytest.approx(
+        s.target_sparsity)
+    if s.mode == "one_shot":
+        assert gmp_sparsity(s, s.begin_step) == s.target_sparsity
+
+
+@settings(deadline=None, max_examples=50)
+@given(schedules)
+def test_final_recompute_fires(s):
+    """A recompute happens at the step the ramp reaches target, so training
+    can never freeze short of target_sparsity (the end_step bugfix)."""
+    if s.mode == "one_shot":
+        assert s.recompute_at(s.begin_step)
+    else:
+        assert s.recompute_at(s.end_step)
+
+
+@settings(deadline=None, max_examples=50)
+@given(schedules)
+def test_layers_all_pruned_by_end_step(s):
+    assert s.layers_pruned_at(s.end_step) == s.num_layers
+    assert s.layers_pruned_at(s.end_step + 7) == s.num_layers
+
+
+@settings(deadline=None, max_examples=30)
+@given(schedules)
+def test_traced_spellings_agree_with_host(s):
+    steps = np.arange(0, s.end_step + 10, dtype=np.int32)
+    host_rec = np.array([s.recompute_at(int(t)) for t in steps])
+    traced_rec = np.asarray(s.recompute_at_traced(jnp.asarray(steps)))
+    np.testing.assert_array_equal(host_rec, traced_rec)
+
+    host_sp = np.array([gmp_sparsity(s, int(t)) for t in steps],
+                       dtype=np.float32)
+    traced_sp = np.asarray(s.sparsity_at_traced(jnp.asarray(steps)))
+    np.testing.assert_allclose(host_sp, traced_sp, rtol=1e-5, atol=1e-6)
+
+
+def test_recompute_non_divisible_span_regression():
+    """--steps 90 shape from the issue: begin=9, end=72, every=4 — the last
+    cadence hit is step 69; without the fix the ramp never reaches target."""
+    s = GMPSchedule(mode="iterative", target_sparsity=0.9, begin_step=9,
+                    end_step=72, recompute_every=4)
+    assert (72 - 9) % 4 != 0
+    fired = [t for t in range(0, 120) if s.recompute_at(t)]
+    assert fired[-1] == 72  # final recompute exactly at end_step
+    assert 69 in fired      # cadence hits unchanged
+    assert gmp_sparsity(s, fired[-1]) == pytest.approx(0.9)
+    # nothing fires past the ramp
+    assert not any(s.recompute_at(t) for t in range(73, 200))

@@ -1,0 +1,215 @@
+"""Device-resident training fast path (launch/train.py).
+
+The jitted multi-step trainer must be equivalent, step for step, to the
+host-driven reference loop — including GMP pattern recomputes, which the
+fast path runs *inside* jit via the traced ``recompute_pattern`` path of
+``sparse_aware_update`` while the reference retargets on the host.
+"""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core.dispatch import SparseFallbackWarning, sparse_op_table
+from repro.core.layouts import (
+    DenseTensor,
+    FixedMaskTensor,
+    GroupedNMTensor,
+)
+from repro.core.sparsifiers import (
+    GroupedNMSparsifier,
+    ScalarThresholdSparsifier,
+)
+from repro.data import DataConfig, SyntheticLMPipeline
+from repro.launch.train import (
+    build_sparse_params,
+    make_multi_step,
+    make_train_step,
+    retarget_sparsity,
+    stack_batches,
+)
+from repro.models import init_lm, loss_fn
+from repro.models.common import mm
+from repro.optim import AdamWConfig, GMPSchedule, adamw_init
+
+KEY = jax.random.PRNGKey(0)
+STEPS = 18
+# non-divisible ramp span: (end - begin) % every == (14 - 2) % 5 == 2, so
+# the final recompute relies on the end_step bugfix in GMPSchedule
+GMP = GMPSchedule(mode="iterative", target_sparsity=0.6, begin_step=2,
+                  end_step=14, recompute_every=5, num_layers=2)
+
+
+def _setup(cfg):
+    params = build_sparse_params(init_lm(KEY, cfg), GMP.sparsity_at(0))
+    data = SyntheticLMPipeline(DataConfig(vocab=cfg.vocab, seq_len=32,
+                                          global_batch=2, seed=3))
+    return params, adamw_init(params), data
+
+
+def _mask_leaves(params):
+    return [np.asarray(l.mask) for l in jax.tree_util.tree_leaves(
+        params, is_leaf=lambda x: isinstance(x, FixedMaskTensor))
+        if isinstance(l, FixedMaskTensor)]
+
+
+def _run_both(cfg, gmp, steps, chunks):
+    """Run host reference and fast path over the same schedule; return
+    (ref_losses, ref_masks, fast_losses, fast_masks)."""
+    opt_cfg = AdamWConfig(lr=1e-3)
+
+    # -- host-driven reference ------------------------------------------
+    params, state, data = _setup(cfg)
+    step_fn = make_train_step(cfg, opt_cfg)
+    ref_losses = []
+    for s in range(steps):
+        if gmp.recompute_at(s):
+            params = retarget_sparsity(params, gmp.sparsity_at(s))
+        batch = {k: jnp.asarray(v) for k, v in data.batch_at(s).items()}
+        params, state, m = step_fn(params, state, batch)
+        ref_losses.append(float(m["loss"]))
+    ref_masks = _mask_leaves(params)
+
+    # -- device-resident fast path (in-jit recomputes) -------------------
+    params, state, data = _setup(cfg)
+    if gmp.recompute_at(0):
+        params = retarget_sparsity(params, gmp.sparsity_at(0))
+    fast_losses = []
+    step = 0
+    for n in chunks:
+        multi = make_multi_step(cfg, opt_cfg, gmp, n)
+        params, state, metrics = multi(params, state,
+                                       stack_batches(data, step, step + n),
+                                       jnp.int32(step), jnp.int32(steps))
+        fast_losses.extend(np.asarray(metrics["loss"]).tolist())
+        step += n
+    assert step == steps
+    return ref_losses, ref_masks, fast_losses, _mask_leaves(params)
+
+
+def test_multi_step_matches_host_loop():
+    """Loss trajectory + final masks of the fast path == host reference
+    (chunk sizes deliberately unaligned with the GMP cadence)."""
+    cfg = get_smoke("bert-base-sten")
+    ref_losses, ref_masks, fast_losses, fast_masks = _run_both(
+        cfg, GMP, STEPS, chunks=(7, 7, 4))
+    np.testing.assert_allclose(fast_losses, ref_losses, rtol=1e-4, atol=1e-5)
+    for got, ref in zip(fast_masks, ref_masks):
+        assert np.array_equal(got, ref)
+
+
+def test_no_spurious_recompute_past_stop():
+    """A run ending exactly on a cadence step must not retarget for the
+    never-executed next step: final masks still equal the host reference
+    (which stops before the step-``stop`` retarget)."""
+    cfg = get_smoke("bert-base-sten")
+    gmp = GMPSchedule(mode="iterative", target_sparsity=0.6, begin_step=2,
+                      end_step=20, recompute_every=5, num_layers=2)
+    steps = 12  # recompute_at(12) fires mid-ramp; the run stops there
+    assert gmp.recompute_at(steps)
+    ref_losses, ref_masks, fast_losses, fast_masks = _run_both(
+        cfg, gmp, steps, chunks=(12,))
+    np.testing.assert_allclose(fast_losses, ref_losses, rtol=1e-4, atol=1e-5)
+    for got, ref in zip(fast_masks, ref_masks):
+        assert np.array_equal(got, ref)
+
+
+def test_in_jit_recompute_reaches_target_sparsity():
+    """The traced end-of-ramp recompute hits target_sparsity even on a
+    non-divisible span (the recompute_at end_step bugfix, in-jit)."""
+    cfg = get_smoke("bert-base-sten")
+    params, state, data = _setup(cfg)
+    multi = make_multi_step(cfg, AdamWConfig(lr=1e-3), GMP, STEPS)
+    params, state, _ = multi(params, state, stack_batches(data, 0, STEPS),
+                             jnp.int32(0), jnp.int32(STEPS))
+    for leaf in jax.tree_util.tree_leaves(
+            params, is_leaf=lambda x: isinstance(x, FixedMaskTensor)):
+        if isinstance(leaf, FixedMaskTensor):
+            density = float(np.asarray(leaf.mask).mean())
+            # top-k keeps exactly round(N * (1 - target)) entries (+ ties)
+            assert density == pytest.approx(1.0 - GMP.target_sparsity,
+                                            abs=2e-3)
+
+
+def test_nmg_training_forward_no_densify_no_fallback():
+    """Fixed-pattern sparse training step with GroupedNM weights dispatches
+    to the registered nmg kernels: the dispatch table covers the signature
+    and the forward raises no SparseFallbackWarning (= no weight densify)."""
+    table = sparse_op_table()
+    assert ("linear", (DenseTensor, GroupedNMTensor), None) in table
+
+    cfg = get_smoke("bert-base-sten")
+    params = init_lm(KEY, cfg)
+
+    def to_nmg(leaf):
+        # per-layer n:m:g conversion of the scan-stacked MLP up-projection
+        parts = [GroupedNMTensor.from_dense(leaf[i], 2, 4, 2, sparse_dim=0)
+                 for i in range(leaf.shape[0])]
+        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *parts)
+
+    params["layers"]["mlp"]["wi"] = to_nmg(params["layers"]["mlp"]["wi"])
+    batch = {
+        "tokens": jax.random.randint(KEY, (2, 16), 0, cfg.vocab),
+        "labels": jax.random.randint(KEY, (2, 16), 0, cfg.vocab),
+    }
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", SparseFallbackWarning)
+        loss, _ = loss_fn(params, cfg, batch, remat="none")
+    assert np.isfinite(float(loss))
+
+
+def test_mm_fused_inline_threshold():
+    """mm's fused-inline option reaches the matmul_threshold kernel (no
+    fallback) and equals matmul + threshold."""
+    x = jax.random.normal(KEY, (3, 8, 32))
+    w = jax.random.normal(jax.random.PRNGKey(1), (32, 16))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", SparseFallbackWarning)
+        y = mm(x, w, inline=ScalarThresholdSparsifier(0.5))
+    ref = np.asarray(x.reshape(-1, 32) @ w)
+    ref = (ref * (np.abs(ref) >= 0.5)).reshape(3, 8, 16)
+    np.testing.assert_allclose(np.asarray(y), ref, rtol=1e-4, atol=1e-5)
+
+
+def test_mlp_inline_threshold_config_forward():
+    """The ModelConfig knob routes the MLP up-projection through the fused
+    inline sparsifier without breaking the forward."""
+    import dataclasses
+
+    cfg = get_smoke("bert-base-sten")
+    cfg = dataclasses.replace(cfg, mlp_inline_threshold=0.05)
+    params = init_lm(KEY, cfg)
+    batch = {
+        "tokens": jax.random.randint(KEY, (2, 16), 0, cfg.vocab),
+        "labels": jax.random.randint(KEY, (2, 16), 0, cfg.vocab),
+    }
+    loss, _ = loss_fn(params, cfg, batch, remat="none")
+    assert np.isfinite(float(loss))
+
+
+def test_decode_with_sparse_output_projection():
+    """Sparse attn.wo now works on the decode path too (mm-dispatched)."""
+    from repro.core.sparsifiers import ScalarFractionSparsifier
+    from repro.models import decode_step, prefill
+
+    cfg = get_smoke("bert-base-sten")
+    params = init_lm(KEY, cfg)
+
+    def to_fixed(leaf):
+        sp = ScalarFractionSparsifier(0.5)
+        parts = []
+        for i in range(leaf.shape[0]):
+            mask = sp.mask(leaf[i]).astype(jnp.bool_)
+            parts.append(FixedMaskTensor(leaf[i] * mask, mask, sp))
+        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *parts)
+
+    params["layers"]["attn"]["wo"] = to_fixed(params["layers"]["attn"]["wo"])
+    tokens = jax.random.randint(KEY, (1, 8), 0, cfg.vocab)
+    logits, cache = prefill(params, cfg, tokens, cache_len=16)
+    tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    logits2, _ = decode_step(params, cfg, tok, cache, jnp.int32(8))
+    assert np.isfinite(np.asarray(logits2)).all()
