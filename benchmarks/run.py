@@ -14,6 +14,7 @@ import time
 import traceback
 
 from benchmarks import (
+    fig6_spmm,
     fig7_energy,
     fig8_finetune,
     fig9_overheads,
@@ -26,6 +27,7 @@ from benchmarks import (
 )
 
 BENCHES = [
+    ("fig6_spmm", fig6_spmm.main),
     ("fig7_energy", fig7_energy.main),
     ("fig10_gemm", fig10_gemm.main),
     ("fig9_overheads", fig9_overheads.main),
@@ -55,14 +57,17 @@ def main() -> None:
         )
 
     summary = []
+    detail = []  # per-measurement records a benchmark returns (fig6_spmm)
     for name, fn in BENCHES:
         if args.only and args.only != name:
             continue
         print(f"\n=== {name} " + "=" * (60 - len(name)), flush=True)
         t0 = time.time()
         try:
-            fn(quick=args.quick)
+            ret = fn(quick=args.quick)
             summary.append((name, time.time() - t0, "ok"))
+            if isinstance(ret, list):
+                detail.extend(r for r in ret if isinstance(r, dict))
         except Exception as e:  # keep the harness going
             traceback.print_exc()
             summary.append((name, time.time() - t0, f"FAIL:{type(e).__name__}"))
@@ -72,14 +77,18 @@ def main() -> None:
     for name, secs, status in summary:
         print(f"{name},{secs * 1e6:.0f},{status}")
 
+    results = [
+        {"name": name, "us_per_call": secs * 1e6, "derived": status}
+        for name, secs, status in summary
+    ]
     with open(args.json, "w") as f:
         json.dump({
             "benchmark": "bench",
             "quick": bool(args.quick),
-            "results": [
-                {"name": name, "us_per_call": secs * 1e6, "derived": status}
-                for name, secs, status in summary
-            ],
+            # wall time per benchmark, then each benchmark's own
+            # per-measurement records (e.g. fig6_spmm's per-(path, M)
+            # kernel timings)
+            "results": results + detail,
         }, f, indent=2)
     print(f"wrote {args.json}")
 

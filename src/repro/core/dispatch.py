@@ -23,6 +23,7 @@ skips the separate inline-sparsifier application.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import itertools
 import warnings
@@ -51,6 +52,8 @@ __all__ = [
     "sparsified_op",
     "OutFormat",
     "sparse_op_table",
+    "dispatch_counters",
+    "reset_dispatch_counters",
 ]
 
 
@@ -66,6 +69,27 @@ _OP_IMPLS: dict[tuple, Callable] = {}
 _DENSE_OPS: dict[str, Callable] = {}
 #: external callables patched into the dispatcher (paper §4.4 patching API)
 _PATCHED: dict[Callable, str] = {}
+
+# dispatch-outcome telemetry: ("impl" | "dense_fallback", op, sig) -> count.
+# Dispatch happens at *trace* time, so these count compilations, not calls
+# — which is exactly the no-fallback evidence the serving perf smoke wants
+# ("did any projection in this run trace through the dense fallback?").
+_DISPATCH_COUNTS: collections.Counter = collections.Counter()
+
+
+def dispatch_counters() -> dict:
+    """{(outcome, op_name, (layout names...)): trace count}."""
+    return dict(_DISPATCH_COUNTS)
+
+
+def reset_dispatch_counters() -> None:
+    _DISPATCH_COUNTS.clear()
+
+
+def _count_dispatch(outcome: str, op_name: str, sig: tuple) -> None:
+    _DISPATCH_COUNTS[
+        (outcome, op_name, tuple(c.__name__ for c in sig))
+    ] += 1
 
 
 def _canonical_name(op) -> str:
@@ -203,6 +227,7 @@ def dispatch(op, *args, inline: Optional[Sparsifier] = None,
         if impl is not None:
             impl = _with_post_sparsifier(impl, inline)
     if impl is not None:
+        _count_dispatch("impl", op_name, sig)
         if target_sig is not None:
             args = tuple(
                 a if isinstance(a, t) else conv.convert(a, t)
@@ -223,6 +248,7 @@ def dispatch(op, *args, inline: Optional[Sparsifier] = None,
            for a in args):
         # DenseTensor wrappers densify for free — only warn when a *sparse*
         # layout is about to be materialized
+        _count_dispatch("dense_fallback", op_name, sig)
         warnings.warn(
             f"sten: falling back to dense implementation of {op_name!r} for "
             f"signature {[c.__name__ for c in sig]}",

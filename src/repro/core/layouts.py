@@ -19,8 +19,9 @@ gradients w.r.t. the stored values flow automatically (see core/autograd.py).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
-from typing import Any, Callable, ClassVar
+from typing import Any, Callable, ClassVar, Optional
 
 import jax
 import jax.numpy as jnp
@@ -34,9 +35,13 @@ __all__ = [
     "FixedMaskTensor",
     "NMTensor",
     "GroupedNMTensor",
+    "SpmmPlan",
+    "build_spmm_plan",
     "register_layout",
     "all_layouts",
     "nm_patterns",
+    "pos_pattern_offsets",
+    "pattern_onehots",
     "pad_to_multiple",
 ]
 
@@ -366,16 +371,44 @@ class FixedMaskTensor(SparsityLayout):
 # ---------------------------------------------------------------------------
 
 
+@functools.lru_cache(maxsize=None)
 def nm_patterns(n: int, m: int) -> np.ndarray:
     """All C(m, n) nonzero patterns (index tuples), in *revolving-door* order
     so adjacent patterns differ in exactly one position (paper §5.1: "the
     nonzero pattern between adjacent groups differs in only one location, so
     that we need save and initialize only one vector register").
 
-    Returns int32 array [C(m,n), n] of in-block offsets, each row sorted.
+    Returns a read-only int32 array [C(m,n), n] of in-block offsets, each
+    row sorted.  Memoized: the table is a compile-time constant consulted by
+    every conversion and kernel trace, so it is built once per (n, m).
     """
     combos = _revolving_door(m, n)
-    return np.array([sorted(c) for c in combos], dtype=np.int32)
+    arr = np.array([sorted(c) for c in combos], dtype=np.int32)
+    arr.setflags(write=False)
+    return arr
+
+
+@functools.lru_cache(maxsize=None)
+def pos_pattern_offsets(n: int, m: int, g: int) -> np.ndarray:
+    """In-block offsets per chunk *position* (read-only int32 [C*g, n]):
+    chunk position p carries pattern ``p // g`` (the format invariant), so
+    this is ``nm_patterns`` with each row repeated g times."""
+    arr = np.repeat(nm_patterns(n, m), g, axis=0)
+    arr.setflags(write=False)
+    return arr
+
+
+@functools.lru_cache(maxsize=None)
+def pattern_onehots(n: int, m: int) -> np.ndarray:
+    """One-hot pattern table (read-only f32 [C, m]): row p has ones at the
+    in-block offsets pattern p keeps.  Used for the conversion's score
+    einsum and carried on :class:`SpmmPlan` for matmul-style gathers."""
+    C = math.comb(m, n)
+    pats = nm_patterns(n, m)
+    oh = np.zeros((C, m), np.float32)
+    oh[np.repeat(np.arange(C), n), pats.reshape(-1)] = 1.0
+    oh.setflags(write=False)
+    return oh
 
 
 def _revolving_door(m: int, n: int) -> list[tuple[int, ...]]:
@@ -465,6 +498,58 @@ def _scatter_last(out, cols, vals):
 # ---------------------------------------------------------------------------
 
 
+@dataclasses.dataclass
+class SpmmPlan:
+    """Precomputed gather plan for the n:m:g matmul kernels (serving fast
+    path).  Built once at conversion time (``dense_to_grouped_nm``) instead
+    of being re-derived from ``blk_idx`` on every kernel call:
+
+      cols        [Gr, nblocks*n] int32 — for each fiber-group and stored
+                  value, the *original* (dense) K-axis row of B it multiplies
+                  (compressed-column index: ``blk_idx * m + pattern offset``).
+      pat_onehot  [C*g, m] int8 — one-hot of the in-block offsets each chunk
+                  position keeps (``pattern_onehots`` repeated g times);
+                  enables matmul-style gathers on backends where dynamic
+                  gathers are slow.
+
+    Both are pytree leaves so the plan flows through jit/scan/stacked-layer
+    params unchanged; they are derived data — any transform that rewrites
+    ``blk_idx`` must rebuild (or drop) the plan.  Both are deliberately
+    *integer* leaves: autograd gives them symbolic-zero cotangents and the
+    optimizer skips them, exactly like ``blk_idx`` (a float leaf here would
+    silently receive weight decay).
+    """
+
+    cols: jnp.ndarray
+    pat_onehot: jnp.ndarray
+
+    def tree_flatten(self):
+        return (self.cols, self.pat_onehot), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    SpmmPlan, SpmmPlan.tree_flatten, SpmmPlan.tree_unflatten
+)
+
+
+def build_spmm_plan(blk_idx: jnp.ndarray, n: int, m: int, g: int) -> SpmmPlan:
+    """Derive the kernel gather plan from a ``blk_idx`` permutation table."""
+    Gr, nchunks, CG = blk_idx.shape
+    pos = jnp.asarray(pos_pattern_offsets(n, m, g))          # [CG, n]
+    cols = blk_idx[..., None] * m + pos[None, None]          # [Gr, nc, CG, n]
+    onehot = jnp.asarray(
+        np.repeat(pattern_onehots(n, m), g, axis=0).astype(np.int8)
+    )
+    return SpmmPlan(
+        cols=cols.reshape(Gr, nchunks * CG * n).astype(jnp.int32),
+        pat_onehot=onehot,
+    )
+
+
 @register_layout
 @dataclasses.dataclass
 class GroupedNMTensor(SparsityLayout):
@@ -502,6 +587,9 @@ class GroupedNMTensor(SparsityLayout):
     gr: int
     dense_shape: tuple   # original (pre-transpose, pre-pad) shape
     sparse_dim: int
+    #: optional precomputed kernel gather plan (derived from blk_idx);
+    #: conversion fills it in, transforms that rewrite blk_idx must rebuild
+    plan: Optional[SpmmPlan] = None
     layout_name: ClassVar[str] = "grouped_nm"
 
     @property
@@ -526,15 +614,24 @@ class GroupedNMTensor(SparsityLayout):
         r, k = self.dense_shape[gd], self.dense_shape[sd]
         return sd, gd, r, k
 
+    def gather_plan(self) -> SpmmPlan:
+        """The kernel gather plan: the precomputed one when the conversion
+        attached it, else derived on the fly from ``blk_idx`` (trace-safe)."""
+        if self.plan is not None:
+            return self.plan
+        return build_spmm_plan(self.blk_idx, self.n, self.m, self.g)
+
     def to_dense(self):
         sd, gd, r, k = self._canonical_dims()
-        pats = jnp.asarray(nm_patterns(self.n, self.m))  # [C, n]
         C = self.num_patterns
         CG = C * self.g
         R_pad, nblocks, n = self.val.shape
         nchunks = nblocks // CG
         # in-block offsets per chunk position (static): pattern p//g
-        pos_pat = jnp.tile(jnp.repeat(pats, self.g, axis=0), (nchunks, 1))
+        pos_pat = jnp.tile(
+            jnp.asarray(pos_pattern_offsets(self.n, self.m, self.g)),
+            (nchunks, 1),
+        )
         # original block per (row, position): [R_pad, nblocks]
         orig_block = self.blk_idx.reshape(R_pad // self.gr, nblocks)
         orig_block_rows = jnp.repeat(orig_block, self.gr, axis=0)
@@ -550,13 +647,17 @@ class GroupedNMTensor(SparsityLayout):
         return out
 
     def tree_flatten(self):
-        return (self.val, self.blk_idx), (
+        # ``plan`` is a child so its index arrays ride along under jit/scan
+        # (None flattens to an empty subtree, keeping plan-free tensors
+        # structurally distinct from planned ones)
+        return (self.val, self.blk_idx, self.plan), (
             self.n, self.m, self.g, self.gr, self.dense_shape, self.sparse_dim,
         )
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, *aux)
+        val, blk_idx, plan = children
+        return cls(val, blk_idx, *aux, plan=plan)
 
     @classmethod
     def from_dense(cls, x, n: int, m: int, g: int, gr: int = 1,

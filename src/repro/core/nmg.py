@@ -38,7 +38,9 @@ import numpy as np
 from repro.core.layouts import (
     GroupedNMTensor,
     NMTensor,
+    build_spmm_plan,
     nm_patterns,
+    pattern_onehots,
     pad_to_multiple,
 )
 
@@ -240,10 +242,7 @@ def dense_to_grouped_nm(x, n: int, m: int, g: int, gr: int = 1,
     xp = pad_to_multiple(pad_to_multiple(xc, gr, 0), m * CG, 1)
     R_pad, K_pad = xp.shape
     Gr, nchunks = R_pad // gr, K_pad // (m * CG)
-    pats_np = nm_patterns(n, m)
-    pat_onehot = jnp.zeros((C, m), xp.dtype).at[
-        jnp.repeat(jnp.arange(C), n), pats_np.reshape(-1)
-    ].set(1.0)
+    pat_onehot = jnp.asarray(pattern_onehots(n, m), xp.dtype)  # memoized
 
     # per-(fiber-group, chunk, block) magnitudes: [Gr, nchunks, CG, m]
     mags = jnp.abs(xp).reshape(Gr, gr, nchunks, CG, m).sum(axis=1)
@@ -266,14 +265,14 @@ def dense_to_grouped_nm(x, n: int, m: int, g: int, gr: int = 1,
     chunk_base = (jnp.arange(nchunks, dtype=jnp.int32) * CG)[None, :, None]
     blk_idx = perm + chunk_base  # global m-block index, [Gr, nchunks, CG]
 
+    # the kernel gather plan is the same index math the value gather needs:
+    # build it once here and carry it on the tensor, so nmg_spmm/nmg_gemv
+    # stop re-deriving cols from blk_idx on every call
+    plan = build_spmm_plan(blk_idx, n, m, g)
+
     # gather values: val[r, c*CG + p, l] = xp[r, blk_idx[r//gr, c, p]*m
     #                                          + P[p//g, l]]
-    pats = jnp.asarray(pats_np)  # [C, n]
-    pos_pat = jnp.repeat(pats, g, axis=0)  # [CG, n]
-    cols = blk_idx[..., None] * m + pos_pat[None, None]  # [Gr, nc, CG, n]
-    cols_rows = jnp.repeat(
-        cols.reshape(Gr, nchunks * CG * n), gr, axis=0
-    )  # [R_pad, nblocks*n]
+    cols_rows = jnp.repeat(plan.cols, gr, axis=0)  # [R_pad, nblocks*n]
     flat_vals = jnp.take_along_axis(xp, cols_rows, axis=1)
     val = flat_vals.reshape(R_pad, nchunks * CG, n)
 
@@ -286,6 +285,7 @@ def dense_to_grouped_nm(x, n: int, m: int, g: int, gr: int = 1,
         gr=gr,
         dense_shape=orig_shape,
         sparse_dim=sd,
+        plan=plan,
     )
 
 
@@ -305,5 +305,6 @@ def grouped_nm_mask(x, n: int, m: int, g: int, gr: int = 1,
     ones = GroupedNMTensor(
         val=jnp.ones_like(t.val), blk_idx=t.blk_idx, n=t.n, m=t.m, g=t.g,
         gr=t.gr, dense_shape=t.dense_shape, sparse_dim=t.sparse_dim,
+        plan=t.plan,
     )
     return ones.to_dense().astype(x.dtype)

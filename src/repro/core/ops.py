@@ -136,7 +136,9 @@ def _nmg_dense_mm(a: GroupedNMTensor, b):
             "GroupedNM matmul needs sparse_dim=1 on the left operand; "
             "store the weight transposed or use 'linear'."
         )
-    return kops.nmg_spmm(a, b)
+    # shape-routed: decode-shaped (narrow) right operands hit the GEMV
+    # kernel, wide ones the column-tiled SpMM (kernels/ops.py)
+    return kops.nmg_matmul(a, b)
 
 
 @disp.register_op_impl("linear", inp=(DenseTensor, GroupedNMTensor),

@@ -268,10 +268,12 @@ def _regather_nm(ref: NMTensor, dense: jnp.ndarray) -> NMTensor:
 def _regather_grouped_nm(ref: GroupedNMTensor, dense: jnp.ndarray
                          ) -> GroupedNMTensor:
     """Fixed-pattern re-gather: keep blk_idx, re-read values from ``dense``.
-    This is the fast path used after most optimizer steps."""
+    This is the fast path used after most optimizer steps.  The gather
+    indices come straight from the tensor's :class:`SpmmPlan` (the pattern
+    is unchanged, so the plan stays valid and is carried forward)."""
     import math as _math
 
-    from repro.core.layouts import nm_patterns, pad_to_multiple
+    from repro.core.layouts import pad_to_multiple
 
     sd = ref.sparse_dim % 2
     xc = dense.T if sd == 0 else dense
@@ -279,17 +281,15 @@ def _regather_grouped_nm(ref: GroupedNMTensor, dense: jnp.ndarray
     CG = C * ref.g
     xp = pad_to_multiple(pad_to_multiple(xc, ref.gr, 0), ref.m * CG, 1)
     R_pad = xp.shape[0]
-    Gr, nchunks, _ = ref.blk_idx.shape
-    pats = jnp.asarray(nm_patterns(ref.n, ref.m))
-    pos_pat = jnp.repeat(pats, ref.g, axis=0)  # [CG, n]
-    cols = ref.blk_idx[..., None] * ref.m + pos_pat[None, None]  # [Gr,nc,CG,n]
-    cols_rows = jnp.repeat(cols.reshape(Gr, -1), ref.gr, axis=0)
+    _, nchunks, _ = ref.blk_idx.shape
+    plan = ref.gather_plan()
+    cols_rows = jnp.repeat(plan.cols, ref.gr, axis=0)  # [R_pad, nblocks*n]
     val = jnp.take_along_axis(xp, cols_rows, axis=1).reshape(
         R_pad, nchunks * CG, ref.n
     )
     return GroupedNMTensor(
         val=val, blk_idx=ref.blk_idx, n=ref.n, m=ref.m, g=ref.g, gr=ref.gr,
-        dense_shape=ref.dense_shape, sparse_dim=ref.sparse_dim,
+        dense_shape=ref.dense_shape, sparse_dim=ref.sparse_dim, plan=plan,
     )
 
 

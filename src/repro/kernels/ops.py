@@ -3,33 +3,85 @@
 Each op picks the Pallas kernel on TPU and interpret-mode (or a pure-XLA
 production path) on CPU, pads/crops shapes, and exposes a layout-level API
 that core/ops.py registers with the dispatcher.
+
+The n:m:g matmul family is **shape-routed** (the Scorch argument: sparse
+kernel choice depends on format *and* operand shape):
+
+  right operand        path                       regime
+  -----------------    ------------------------   -------------------------
+  M <= DECODE_M_MAX    ``nmg_gemv``  (decode)     serving decode GEMV: tiny
+                                                  activation batch, weight-
+                                                  stationary, dtype epilogue
+  M >  DECODE_M_MAX    ``nmg_spmm``  (prefill)    wide right operand, column
+                                                  tiled, f32 accumulator out
+
+Both paths consume the :class:`~repro.core.layouts.SpmmPlan` gather plan
+the conversion precomputed (``GroupedNMTensor.gather_plan``) instead of
+re-deriving index math per call.  ``kernel_counters`` records which path
+each *trace* took — the no-dense-fallback evidence the serving perf smoke
+asserts on (dispatch is trace-time, so counters count compilations, not
+calls).
 """
 
 from __future__ import annotations
 
+import collections
 import functools
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.layouts import GroupedNMTensor, nm_patterns
+from repro.core.layouts import GroupedNMTensor
 from repro.kernels import ref as kref
 from repro.kernels.fused_sparse_matmul import matmul_threshold_pallas
 from repro.kernels.nm_mask import nm_mask_pallas
+from repro.kernels.nmg_gemv import nmg_gemv_pallas
 from repro.kernels.nmg_spmm import nmg_spmm_pallas
 
 __all__ = [
     "on_tpu",
+    "DECODE_M_MAX",
+    "nmg_matmul",
     "nmg_spmm",
     "nmg_spmm_xla",
+    "nmg_gemv",
+    "nmg_gemv_xla",
     "nmg_linear",
     "nm_mask",
     "matmul_threshold",
+    "kernel_counters",
+    "reset_kernel_counters",
 ]
+
+#: widest right operand still considered decode-shaped (slot batches are
+#: single-token, so M == number of serving slots — a handful)
+DECODE_M_MAX = 16
+
+#: cap on the gathered-operand size (elements) of one XLA spmm block —
+#: bounds peak memory like the old per-group scan did, without its
+#: group-at-a-time serialization
+_SPMM_BLOCK_ELEMS = 1 << 22
+
+# (kernel, path) -> number of traces routed there
+_KERNEL_COUNTS: collections.Counter = collections.Counter()
+
+
+def kernel_counters() -> dict:
+    """Trace-time routing evidence: {(kernel, path): count}."""
+    return dict(_KERNEL_COUNTS)
+
+
+def reset_kernel_counters() -> None:
+    _KERNEL_COUNTS.clear()
 
 
 def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# prefill-shaped path: wide right operand
+# ---------------------------------------------------------------------------
 
 
 def nmg_spmm(a: GroupedNMTensor, b: jnp.ndarray, *, use_pallas: bool | None = None
@@ -37,48 +89,142 @@ def nmg_spmm(a: GroupedNMTensor, b: jnp.ndarray, *, use_pallas: bool | None = No
     """C = A_canonical[R, K] @ B[K, N] (f32).
 
     Pallas kernel on TPU (interpret-mode validation on CPU via tests);
-    the gather-based XLA path otherwise.
+    the batched gather-einsum XLA path otherwise.
     """
     if use_pallas is None:
         use_pallas = on_tpu()
+    _KERNEL_COUNTS[("nmg_spmm", "pallas" if use_pallas else "xla")] += 1
     if use_pallas:
         return nmg_spmm_pallas(a, b, interpret=not on_tpu())
     return nmg_spmm_xla(a, b)
 
 
+def _gather_block(b_p, cols, val_g):
+    """One activation-stationary block: gather the compressed B rows for a
+    slab of fiber-groups and contract in a single einsum.
+
+    cols  [G, nb*n]  compressed-column plan slab
+    val_g [G, gr, nb*n]
+    -> [G, gr, N] f32
+    """
+    bg = jnp.take(b_p, cols.reshape(-1), axis=0)
+    bg = bg.reshape(*cols.shape, b_p.shape[1])           # [G, nb*n, N]
+    return jnp.einsum(
+        "grk,gkn->grn",
+        val_g.astype(jnp.float32), bg.astype(jnp.float32),
+    )
+
+
 @jax.jit
 def nmg_spmm_xla(a: GroupedNMTensor, b: jnp.ndarray) -> jnp.ndarray:
-    """Pure-XLA production path for CPU: scan over fiber-groups, gathering
-    the compressed B rows per group and running one dense matmul per group.
-    Memory-safe (peak extra = one gathered [K*n/m, N] block per group)."""
-    n, m, g, gr = a.n, a.m, a.g, a.gr
-    val, blk_idx = a.val, a.blk_idx           # [R_pad, nb, n], [Gr, nc, CG]
-    R_pad, nblocks, _ = val.shape
-    Gr = blk_idx.shape[0]
-    K_pad = nblocks * m
+    """Pure-XLA production path: one batched gather + blocked einsum over
+    the precomputed column plan.  Replaces the old per-fiber-group
+    ``lax.scan`` (Gr sequential micro-matmuls) with ceil(Gr / block)
+    vectorized blocks, where the block size caps the gathered operand at
+    ``_SPMM_BLOCK_ELEMS`` elements (the old scan's memory-safety property,
+    without its serialization)."""
+    gr = a.gr
+    val = a.val                                # [R_pad, nblocks, n]
+    R_pad, nblocks, n = val.shape
+    cols = a.gather_plan().cols                # [Gr, nblocks*n]
+    Gr = cols.shape[0]
+    K_pad = nblocks * a.m
     K, N = b.shape
     b_p = jnp.pad(b, ((0, K_pad - K), (0, 0)))
-
-    pats = jnp.asarray(nm_patterns(n, m))     # [C, n]
-    pos_pat = jnp.repeat(pats, g, axis=0)     # [CG, n]: pattern of position
-    nchunks = blk_idx.shape[1]
-    # compressed B-row index per (fiber-group, position, l): [Gr, nb*n]
-    cols = blk_idx[..., None] * m + pos_pat[None, None]
-    cols = cols.reshape(Gr, nblocks * n)
     val_g = val.reshape(Gr, gr, nblocks * n)
 
-    def per_group(carry, xs):
-        cols_g, vals_g = xs
-        bg = jnp.take(b_p, cols_g, axis=0)    # [nb*n, N]
-        return carry, jnp.dot(
-            vals_g.astype(jnp.float32), bg.astype(jnp.float32)
+    per_group = nblocks * n * N                # gathered elements per group
+    gb = max(1, min(Gr, _SPMM_BLOCK_ELEMS // max(1, per_group)))
+    nblk = -(-Gr // gb)
+    if nblk == 1:
+        out = _gather_block(b_p, cols, val_g)  # [Gr, gr, N]
+    else:
+        pad = nblk * gb - Gr
+        cols_b = jnp.pad(cols, ((0, pad), (0, 0))).reshape(nblk, gb, -1)
+        val_b = jnp.pad(val_g, ((0, pad), (0, 0), (0, 0))).reshape(
+            nblk, gb, gr, -1
         )
-
-    _, out = jax.lax.scan(per_group, None, (cols, val_g))  # [Gr, gr, N]
+        out = jax.lax.map(
+            lambda xs: _gather_block(b_p, xs[0], xs[1]), (cols_b, val_b)
+        )
+        out = out.reshape(nblk * gb, gr, N)[:Gr]
     out = out.reshape(R_pad, N)
     sd = a.sparse_dim % 2
     R = a.dense_shape[1 - sd]
     return out[:R]
+
+
+# ---------------------------------------------------------------------------
+# decode-shaped path: narrow right operand (serving GEMV)
+# ---------------------------------------------------------------------------
+
+
+def nmg_gemv(a: GroupedNMTensor, b: jnp.ndarray, *, out_dtype=None,
+             transpose_out: bool = False,
+             use_pallas: bool | None = None) -> jnp.ndarray:
+    """C = A_canonical[R, K] @ B[K, M] for decode-shaped (narrow) B.
+
+    ``out_dtype`` is honored in the kernel epilogue (single cast after the
+    f32 accumulation); default f32 mirrors the SpMM contract so the two
+    paths are drop-in interchangeable.  ``transpose_out=True`` returns
+    [M, R] — free on the XLA path (the einsum emits that order directly),
+    a transpose of the narrow output on the Pallas path."""
+    if use_pallas is None:
+        use_pallas = on_tpu()
+    _KERNEL_COUNTS[("nmg_gemv", "pallas" if use_pallas else "xla")] += 1
+    if use_pallas:
+        out = nmg_gemv_pallas(a, b, out_dtype=out_dtype,
+                              interpret=not on_tpu())
+        return out.T if transpose_out else out
+    return nmg_gemv_xla(a, b, out_dtype=out_dtype,
+                        transpose_out=transpose_out)
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "transpose_out"))
+def nmg_gemv_xla(a: GroupedNMTensor, b: jnp.ndarray, *, out_dtype=None,
+                 transpose_out: bool = False) -> jnp.ndarray:
+    """Activation-stationary XLA decode path: B is small enough to gather
+    in one shot, so the whole product is a single gather + einsum over the
+    precomputed plan.  ``transpose_out=True`` emits [M, R] directly (the
+    orientation ``nmg_linear`` wants), skipping the output transpose."""
+    gr = a.gr
+    val = a.val
+    R_pad, nblocks, n = val.shape
+    cols = a.gather_plan().cols                # [Gr, nblocks*n]
+    Gr = cols.shape[0]
+    K_pad = nblocks * a.m
+    K, M = b.shape
+    b_p = jnp.pad(b, ((0, K_pad - K), (0, 0)))
+
+    xg = jnp.take(b_p, cols.reshape(-1), axis=0)
+    xg = xg.reshape(Gr, nblocks * n, M)
+    val_g = val.reshape(Gr, gr, nblocks * n)
+    sd = a.sparse_dim % 2
+    R = a.dense_shape[1 - sd]
+    spec = "grk,gkm->mgr" if transpose_out else "grk,gkm->grm"
+    out = jnp.einsum(spec, val_g.astype(jnp.float32), xg.astype(jnp.float32))
+    if transpose_out:
+        out = out.reshape(M, R_pad)[:, :R]
+    else:
+        out = out.reshape(R_pad, M)[:R]
+    if out_dtype is not None:
+        out = out.astype(out_dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# shape routing
+# ---------------------------------------------------------------------------
+
+
+def nmg_matmul(a: GroupedNMTensor, b: jnp.ndarray, *,
+               use_pallas: bool | None = None) -> jnp.ndarray:
+    """Shape-routed sparse @ dense: decode-shaped right operands take the
+    GEMV path, everything else the column-tiled SpMM.  f32 output either
+    way (the shared kernel contract)."""
+    if b.ndim == 2 and b.shape[1] <= DECODE_M_MAX:
+        return nmg_gemv(a, b, use_pallas=use_pallas)
+    return nmg_spmm(a, b, use_pallas=use_pallas)
 
 
 def nmg_linear(x: jnp.ndarray, w: GroupedNMTensor, *,
@@ -87,15 +233,27 @@ def nmg_linear(x: jnp.ndarray, w: GroupedNMTensor, *,
     (K) and groups along the output axis (N) — the serving fast path
     (paper §5.3: 'our sparse-dense GEMM kernel during inference').
 
-    x: [..., K]  ->  y: [..., N].  Internally computes
-    (W_canonical[N, K] @ x^T)^T with the spmm kernel.
+    x: [..., K]  ->  y: [..., N] in x.dtype.  Decode-shaped x (few rows)
+    takes the GEMV kernel, whose epilogue emits x.dtype directly — no f32
+    round-trip and (on the XLA path) no output transpose at all; the
+    prefill path casts before transposing, so the copy happens at the
+    narrow dtype.
     """
     lead = x.shape[:-1]
     K = x.shape[-1]
-    xt = x.reshape(-1, K).T                      # [K, M]
-    yt = nmg_spmm(w, xt, use_pallas=use_pallas)  # [N, M]
-    y = yt.T.reshape(*lead, -1)
-    return y.astype(x.dtype)
+    x2 = x.reshape(-1, K)
+    M = x2.shape[0]
+    if M <= DECODE_M_MAX:
+        y = nmg_gemv(w, x2.T, out_dtype=x.dtype, transpose_out=True,
+                     use_pallas=use_pallas)
+        return y.reshape(*lead, -1)
+    yt = nmg_spmm(w, x2.T, use_pallas=use_pallas)  # f32 [N, M]
+    return yt.astype(x.dtype).T.reshape(*lead, -1)
+
+
+# ---------------------------------------------------------------------------
+# other kernels
+# ---------------------------------------------------------------------------
 
 
 def nm_mask(x: jnp.ndarray, n: int, m: int, *, use_pallas: bool | None = None

@@ -81,7 +81,8 @@ def _make_requests(key, cfg, args) -> list:
 def _run_engine(args, cfg, params, key) -> int:
     reqs = _make_requests(key, cfg, args)
     max_seq = args.prompt_len + args.gen_len
-    ekw = dict(max_slots=args.max_slots, max_seq_len=max_seq)
+    ekw = dict(max_slots=args.max_slots, max_seq_len=max_seq,
+               decode_chunk=args.decode_chunk)
     warm = not args.no_warmup
     if args.sparse:
         n, m, g = (int(v) for v in args.nm.split(":"))
@@ -129,6 +130,10 @@ def main(argv=None):
                     help="slot-batch size in --engine mode")
     ap.add_argument("--arrival-gap", type=float, default=0.0,
                     help="seconds between request arrivals (--engine)")
+    ap.add_argument("--decode-chunk", type=int, default=8,
+                    help="decode steps per jit call in --engine mode "
+                         "(device-resident greedy inner loop; 1 = the "
+                         "per-token host-paced reference)")
     ap.add_argument("--no-warmup", action="store_true",
                     help="skip the pre-compile pass; reported latencies "
                          "then include XLA compile stalls")

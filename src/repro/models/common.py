@@ -43,8 +43,10 @@ def mm(x, w, *, inline=None):
     x2 = x.reshape(-1, x.shape[-1])
     if isinstance(w, SparsityLayout):
         # layout signature dispatch: FixedMask -> masked matmul impl,
-        # GroupedNM -> nmg_spmm/nmg_linear — the weight is never densified
-        # here; only registered impls decide its representation
+        # GroupedNM -> the shape-routed nmg kernels (decode-shaped x hits
+        # the GEMV path, prefill-shaped x the SpMM path) — the weight is
+        # never densified here; only registered impls decide its
+        # representation
         y = sten_ops.linear(x2, w, inline=inline)
     else:
         # dense weight + inline sparsifier: wrap operands so dispatch sees
@@ -53,8 +55,12 @@ def mm(x, w, *, inline=None):
     if isinstance(y, SparsityLayout):
         y = y.to_dense()
     # match the dense path's promotion semantics (x @ w), so sparsifying a
-    # weight never changes a layer's output dtype
-    return y.astype(jnp.result_type(x.dtype, w.dtype)).reshape(*lead, -1)
+    # weight never changes a layer's output dtype; the decode GEMV kernel
+    # already emits x.dtype, in which case this cast is a no-op
+    out_dtype = jnp.result_type(x.dtype, w.dtype)
+    if y.dtype != out_dtype:
+        y = y.astype(out_dtype)
+    return y.reshape(*lead, -1)
 
 
 @dataclasses.dataclass(frozen=True)

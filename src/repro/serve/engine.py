@@ -10,6 +10,14 @@ per-slot position vector threaded through ``decode_step`` /
 admission overwrites them — the paper's sparse-serving scenario (Fig 11)
 run as a service rather than a one-shot batch.
 
+Decoding is *chunked*: when every active request is greedy, the engine
+runs ``decode_chunk`` steps in one jitted ``lax.scan`` with on-device
+argmax sampling and fetches the whole token block in a single host sync
+(the serving analogue of the trainer's ``make_multi_step``), instead of
+blocking on the device once per token.  Requests with non-greedy sampling
+fall back to the per-token loop so their host-side RNG streams stay
+reproducible and batch-independent.
+
 The sparse path is the point: ``sparsify_for_serving`` converts FFN
 weights to :class:`GroupedNMTensor` through the ordinary
 :class:`SparsityBuilder`, and because layouts are pytrees the engine's
@@ -56,10 +64,41 @@ def _jit_decode(cfg: ModelConfig):
     )
 
 
+@functools.lru_cache(maxsize=None)
+def _jit_decode_chunk(cfg: ModelConfig, n_steps: int):
+    """Jitted multi-token inner decode loop (the serving analogue of
+    ``launch/train.py:make_multi_step``): ``n_steps`` decode steps under one
+    ``lax.scan`` with on-device greedy sampling, so the host syncs once per
+    chunk instead of once per token.  Returns the [n_steps, max_slots]
+    token matrix (the single chunked host fetch) plus the updated cache."""
+
+    def chunk(p, tok, cache, pos):
+        def body(carry, _):
+            tok, cache, pos = carry
+            logits, cache = decode_step(p, cfg, tok, cache, pos)
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)   # [B] on device
+            return (nxt[:, None], cache, pos + 1), nxt
+
+        (_, cache, _), toks = jax.lax.scan(
+            body, (tok, cache, pos), None, length=n_steps
+        )
+        return toks, cache
+
+    return jax.jit(chunk, donate_argnums=(2,))
+
+
 def sparsify_for_serving(params, n: int = 1, m: int = 4, g: int = 16,
-                         gr: int = 1):
+                         gr: int = 64):
     """Convert FFN weights to the n:m:g inference layout (paper §5.3:
-    'our sparse-dense GEMM kernel during inference')."""
+    'our sparse-dense GEMM kernel during inference').
+
+    ``gr`` shares each chunk permutation across ``gr`` consecutive output
+    fibers (the row-sharing format adaptation).  For serving it defaults
+    to 64: the decode GEMV and prefill SpMM kernels amortize their B-row
+    gathers across the shared rows and contract them as one dense tile,
+    which is what makes the sparse path *faster* than dense rather than
+    gather-bound (gr=1, the paper's per-fiber CPU format, keeps maximal
+    energy but pays one gather per stored value per call)."""
     sb = SparsityBuilder()
     sp = GroupedNMSparsifier(n, m, g, gr, sparse_dim=0)  # [K, N] weights
     sb.set_weight("*mlp.wi", sp, GroupedNMTensor)
@@ -92,20 +131,33 @@ class ServeEngine:
         Admission overwrites whatever a slot holds and decode masks each
         slot to its own prefix, so this is off by default; tests use it to
         prove slot isolation.
+    decode_chunk : decode steps per jit call between admissions.  When every
+        active request decodes greedily, the engine runs ``decode_chunk``
+        steps device-resident (``lax.scan`` with on-device sampling) and
+        fetches the whole token block in one host sync; tokens past a stop
+        condition are discarded host-side.  1 restores the per-token
+        reference loop; any non-greedy active request also falls back to it
+        (host-side RNG sampling keeps per-request streams batch-independent).
     clock : timestamp source (injectable for deterministic tests)
     """
 
     def __init__(self, params, cfg: ModelConfig, *, max_slots: int = 8,
                  max_seq_len: int = 256, reset_freed_slots: bool = False,
+                 decode_chunk: int = 8,
                  clock: Callable[[], float] = time.perf_counter):
         self.params = params
         self.cfg = cfg
         self.max_slots = max_slots
         self.max_seq_len = max_seq_len
         self.reset_freed_slots = reset_freed_slots
+        self.decode_chunk = max(1, decode_chunk)
         self.kv = SlotKVCache(cfg, max_slots, max_seq_len)
         self.queue = RequestQueue()
         self._decode = _jit_decode(cfg)
+        self._decode_chunk = (
+            _jit_decode_chunk(cfg, self.decode_chunk)
+            if self.decode_chunk > 1 else None
+        )
         self._slots: list[Optional[_SlotState]] = [None] * max_slots
         # next cache write position per slot == current valid length
         self._pos = np.zeros(max_slots, np.int32)
@@ -181,8 +233,10 @@ class ServeEngine:
     # -- the engine loop --------------------------------------------------
     def step(self) -> int:
         """One scheduler iteration: admit ready requests into free slots,
-        then run one decode step over the batch.  Returns the number of
-        tokens produced (0 when the engine idled)."""
+        then run one decode *chunk* over the batch (``decode_chunk`` steps
+        device-resident when every active request is greedy, one host-paced
+        step otherwise).  Returns the number of tokens produced (0 when the
+        engine idled)."""
         now = self._now()
         produced = 0
         for slot in self.free_slots():
@@ -194,7 +248,15 @@ class ServeEngine:
         active = [i for i, s in enumerate(self._slots) if s is not None]
         if not active:
             return produced
+        if self._decode_chunk is not None and all(
+            self._slots[s].req.sampling.greedy for s in active
+        ):
+            return produced + self._step_chunked(active)
+        return produced + self._step_single(active)
 
+    def _step_single(self, active) -> int:
+        """Per-token reference path: one decode step, host-side sampling."""
+        produced = 0
         tok = jnp.asarray(self._tok[:, None])
         pos = jnp.asarray(self._pos)
         logits, self.kv.data = self._decode(self.params, tok, self.kv.data,
@@ -211,6 +273,42 @@ class ServeEngine:
             produced += 1
             if self._stopped(st, nxt):
                 self._finish(slot)
+        return produced
+
+    def _step_chunked(self, active) -> int:
+        """Greedy fast path: ``decode_chunk`` steps in one jit call with
+        on-device argmax sampling, then a single chunked host fetch.
+
+        The device loop always runs the full fixed-length chunk (one
+        compiled program, no per-remaining-budget recompiles); tokens a
+        request produced past its stop token or budget are simply discarded
+        on the host.  Overshoot cache writes land in positions of slots
+        that are about to be freed and are either overwritten by the next
+        occupant's prefill/decode writes or masked out by the per-slot
+        valid-prefix attention mask, so they are never read.  Per-token
+        timestamps spread the measured chunk latency uniformly across the
+        chunk's tokens (the stream's average decode cadence)."""
+        produced = 0
+        T = self.decode_chunk
+        t0 = self._now()
+        toks, self.kv.data = self._decode_chunk(
+            self.params, jnp.asarray(self._tok[:, None]), self.kv.data,
+            jnp.asarray(self._pos),
+        )
+        toks_np = np.asarray(toks)  # [T, max_slots] — one host sync
+        t1 = self._now()
+        for slot in active:
+            st = self._slots[slot]
+            for t in range(T):
+                nxt = int(toks_np[t, slot])
+                st.tokens.append(nxt)
+                st.token_times.append(t0 + (t + 1) * (t1 - t0) / T)
+                self._pos[slot] += 1
+                self._tok[slot] = nxt
+                produced += 1
+                if self._stopped(st, nxt):
+                    self._finish(slot)
+                    break
         return produced
 
     def run(self, requests: Iterable[Request] = (),
@@ -270,7 +368,7 @@ def warmup_engine(params, cfg: ModelConfig, requests, *,
 
 
 def compare_dense_sparse(params, cfg: ModelConfig, requests, *,
-                         nm: tuple = (1, 4, 16), gr: int = 1,
+                         nm: tuple = (1, 4, 16), gr: int = 64,
                          engine_kwargs: Optional[dict] = None,
                          warmup: bool = False):
     """Serve the same request trace with dense and n:m:g-sparse weights.

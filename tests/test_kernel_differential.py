@@ -1,12 +1,19 @@
-"""Golden + differential tests for the n:m:g Pallas SpMM kernel.
+"""Golden + differential tests for the n:m:g matmul kernels.
 
 ``kernels/nmg_spmm.py`` (interpret mode on CPU) is swept against the
 densify-then-matmul oracle in ``kernels/ref.py`` across a grid of
 (n, m, g, gr) formats and shapes with explicit tolerances, plus a golden
 exact-arithmetic case and a regression assertion on the output dtype
 (the kernel contract is an f32 accumulator regardless of input dtype).
+
+The decode-optimized GEMV path gets the same treatment: an M-sweep
+asserting ``gemv == spmm == oracle`` across formats and right-operand
+widths (including the shape-router boundary), the dtype-preserving
+epilogue contract, and plan-caching properties (a precomputed SpmmPlan
+changes nothing but the work saved).
 """
 
+import dataclasses
 import math
 
 import jax
@@ -16,7 +23,9 @@ import pytest
 
 from repro.core import nmg
 from repro.core.layouts import nm_patterns
+from repro.kernels import ops as kops
 from repro.kernels import ref as kref
+from repro.kernels.nmg_gemv import nmg_gemv_pallas
 from repro.kernels.nmg_spmm import nmg_spmm_pallas
 
 KEY = jax.random.PRNGKey(42)
@@ -95,6 +104,143 @@ def test_nmg_spmm_golden_exact():
     np.testing.assert_array_equal(np.asarray(t.to_dense()), x)
     out = nmg_spmm_pallas(t, jnp.eye(K, dtype=jnp.float32), interpret=True)
     np.testing.assert_array_equal(np.asarray(out), x)
+
+
+# ---------------------------------------------------------------------------
+# decode GEMV path: gemv == spmm == oracle across the M sweep
+# ---------------------------------------------------------------------------
+
+# right-operand widths: decode batches (1..8), the router boundary (16),
+# and a prefill-shaped width (128) to pin both sides of the crossover
+M_SWEEP = (1, 2, 4, 8, 16, 128)
+
+
+@pytest.mark.parametrize("fmt", [(1, 4, 4, 2), (2, 4, 2, 4), (2, 4, 16, 8),
+                                 (3, 6, 1, 2)],
+                         ids=lambda f: "{}:{}:{}gr{}".format(*f))
+@pytest.mark.parametrize("M", M_SWEEP)
+def test_nmg_gemv_matches_spmm_and_oracle(fmt, M):
+    n, m, g, gr = fmt
+    R, K = 16, 192
+    x = jax.random.normal(KEY, (R, K))
+    b = jax.random.normal(jax.random.PRNGKey(1), (K, M))
+    t = nmg.dense_to_grouped_nm(x, n=n, m=m, g=g, gr=gr)
+    oracle = np.asarray(kref.nmg_spmm_ref(t, b))
+    spmm = np.asarray(kops.nmg_spmm_xla(t, b))
+    gemv = np.asarray(kops.nmg_gemv_xla(t, b))
+    assert gemv.shape == spmm.shape == (R, M)
+    # same contraction order in f32 => the two XLA paths agree tightly
+    np.testing.assert_allclose(gemv, spmm, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(gemv, oracle, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("fmt", [(1, 4, 4, 2), (2, 4, 2, 4)],
+                         ids=lambda f: "{}:{}:{}gr{}".format(*f))
+def test_nmg_gemv_pallas_interpret_matches_oracle(fmt):
+    n, m, g, gr = fmt
+    x = jax.random.normal(KEY, (8, 96))
+    b = jax.random.normal(jax.random.PRNGKey(1), (96, 4))
+    t = nmg.dense_to_grouped_nm(x, n=n, m=m, g=g, gr=gr)
+    out = nmg_gemv_pallas(t, b, interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(kref.nmg_spmm_ref(t, b)),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_nmg_gemv_dtype_preserving_epilogue(dtype):
+    """Contract: accumulation is f32, but the epilogue emits the requested
+    dtype — the serving path asks for the activation dtype and must not get
+    a silent f32 round-trip (and default stays f32, the SpMM contract)."""
+    x = jax.random.normal(KEY, (8, 96)).astype(dtype)
+    b = jax.random.normal(jax.random.PRNGKey(1), (96, 4)).astype(dtype)
+    t = nmg.dense_to_grouped_nm(x, n=2, m=4, g=2, gr=4)
+    assert kops.nmg_gemv_xla(t, b).dtype == jnp.float32
+    assert kops.nmg_gemv_xla(t, b, out_dtype=dtype).dtype == dtype
+    assert nmg_gemv_pallas(t, b, out_dtype=dtype, interpret=True).dtype \
+        == dtype
+    tol = TOL[jnp.dtype(dtype)]
+    np.testing.assert_allclose(
+        np.asarray(kops.nmg_gemv_xla(t, b, out_dtype=jnp.float32)),
+        np.asarray(kref.nmg_spmm_ref(t, b)), rtol=tol, atol=tol,
+    )
+
+
+def test_nmg_linear_dtype_and_value_both_regimes():
+    """nmg_linear keeps x.dtype on both the decode (gemv) and prefill
+    (spmm) routes and matches the densified product."""
+    w = jax.random.normal(KEY, (96, 64))
+    wt = nmg.dense_to_grouped_nm(w, n=2, m=4, g=2, gr=4, sparse_dim=0)
+    for rows, dtype in [(4, jnp.bfloat16), (4, jnp.float32),
+                        (64, jnp.bfloat16), (64, jnp.float32)]:
+        x = jax.random.normal(jax.random.PRNGKey(2), (rows, 96)).astype(dtype)
+        y = kops.nmg_linear(x, wt)
+        assert y.dtype == dtype, (rows, dtype, y.dtype)
+        tol = 1e-3 if dtype == jnp.float32 else 5e-2
+        np.testing.assert_allclose(
+            np.asarray(y.astype(jnp.float32)),
+            np.asarray(x.astype(jnp.float32) @ wt.to_dense()),
+            rtol=tol, atol=tol,
+        )
+
+
+def test_nmg_matmul_shape_routing():
+    """The router sends decode-shaped right operands to the GEMV path and
+    wide ones to the SpMM path (trace-time counters as evidence)."""
+    x = jax.random.normal(KEY, (8, 96))
+    t = nmg.dense_to_grouped_nm(x, n=1, m=4, g=4, gr=2)
+    kops.reset_kernel_counters()
+    kops.nmg_matmul(t, jnp.ones((96, kops.DECODE_M_MAX)), use_pallas=False)
+    kops.nmg_matmul(t, jnp.ones((96, kops.DECODE_M_MAX + 1)),
+                    use_pallas=False)
+    counts = kops.kernel_counters()
+    assert counts.get(("nmg_gemv", "xla")) == 1
+    assert counts.get(("nmg_spmm", "xla")) == 1
+
+
+# ---------------------------------------------------------------------------
+# SpmmPlan caching properties
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fmt", FORMATS,
+                         ids=lambda f: "{}:{}:{}gr{}".format(*f))
+def test_spmm_plan_planned_equals_plan_free(fmt):
+    """A conversion-time plan is pure caching: stripping it changes no
+    result bit (the kernels re-derive identical indices from blk_idx)."""
+    n, m, g, gr = fmt
+    x = jax.random.normal(KEY, (8, 96))
+    b = jax.random.normal(jax.random.PRNGKey(1), (96, 4))
+    t = nmg.dense_to_grouped_nm(x, n=n, m=m, g=g, gr=gr)
+    assert t.plan is not None
+    bare = dataclasses.replace(t, plan=None)
+    assert bare.plan is None
+    # derived plan == stored plan
+    np.testing.assert_array_equal(np.asarray(bare.gather_plan().cols),
+                                  np.asarray(t.plan.cols))
+    # identical results on every path, bitwise
+    np.testing.assert_array_equal(np.asarray(kops.nmg_gemv_xla(t, b)),
+                                  np.asarray(kops.nmg_gemv_xla(bare, b)))
+    np.testing.assert_array_equal(np.asarray(kops.nmg_spmm_xla(t, b)),
+                                  np.asarray(kops.nmg_spmm_xla(bare, b)))
+    np.testing.assert_array_equal(np.asarray(t.to_dense()),
+                                  np.asarray(bare.to_dense()))
+
+
+def test_spmm_plan_survives_pytree_roundtrip():
+    """The plan rides along through flatten/unflatten (jit/scan boundary)
+    and the layout roundtrip is unaffected by its presence."""
+    x = jax.random.normal(KEY, (8, 96))
+    t = nmg.dense_to_grouped_nm(x, n=2, m=4, g=2, gr=2)
+    leaves, treedef = jax.tree_util.tree_flatten(t)
+    t2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert t2.plan is not None
+    np.testing.assert_array_equal(np.asarray(t2.plan.cols),
+                                  np.asarray(t.plan.cols))
+    np.testing.assert_array_equal(np.asarray(t2.plan.pat_onehot),
+                                  np.asarray(t.plan.pat_onehot))
+    np.testing.assert_array_equal(np.asarray(t2.to_dense()),
+                                  np.asarray(t.to_dense()))
 
 
 def test_nmg_spmm_zero_and_ones_b():

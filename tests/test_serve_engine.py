@@ -89,6 +89,49 @@ def test_engine_matches_oneshot_under_batching(setup):
     assert got.tokens == want
 
 
+def test_chunked_decode_matches_per_token_reference(setup):
+    """The jitted multi-token decode chunk (on-device greedy sampling, one
+    host fetch per chunk) produces exactly the tokens of the per-token
+    host-paced loop, across mixed budgets, stop tokens, and slot reuse."""
+    cfg, params = setup
+    prompt = make_prompt(10, seed=5, vocab=cfg.vocab)
+    stop = oneshot_greedy(params, cfg, prompt, gen_len=6)[2]
+    reqs = lambda: [  # noqa: E731
+        Request(uid=0, prompt=make_prompt(12, seed=7, vocab=cfg.vocab),
+                max_new_tokens=9),
+        Request(uid=1, prompt=make_prompt(6, seed=8, vocab=cfg.vocab),
+                max_new_tokens=3),
+        Request(uid=2, prompt=prompt, max_new_tokens=6,
+                stop_tokens=(stop,)),
+        Request(uid=3, prompt=make_prompt(5, seed=9, vocab=cfg.vocab),
+                max_new_tokens=7),
+    ]
+    ref = ServeEngine(params, cfg, max_slots=2, max_seq_len=24,
+                      decode_chunk=1).run(reqs())
+    got = ServeEngine(params, cfg, max_slots=2, max_seq_len=24,
+                      decode_chunk=4).run(reqs())
+    assert [(o.uid, o.tokens, o.finish_reason) for o in got] == \
+        [(o.uid, o.tokens, o.finish_reason) for o in ref]
+
+
+def test_non_greedy_requests_take_host_path(setup):
+    """A non-greedy request in the batch falls back to the per-token loop,
+    keeping seeded sampling reproducible under chunked engines."""
+    cfg, params = setup
+    prompt = make_prompt(8, seed=11, vocab=cfg.vocab)
+    sp = SamplingParams(greedy=False, temperature=0.7, top_k=8, seed=42)
+    mk = lambda: [Request(uid=0, prompt=prompt, max_new_tokens=5,  # noqa: E731
+                          sampling=sp),
+                  Request(uid=1, prompt=make_prompt(6, seed=12,
+                                                    vocab=cfg.vocab),
+                          max_new_tokens=5)]
+    a = ServeEngine(params, cfg, max_slots=2, max_seq_len=14,
+                    decode_chunk=8).run(mk())
+    b = ServeEngine(params, cfg, max_slots=2, max_seq_len=14,
+                    decode_chunk=1).run(mk())
+    assert [o.tokens for o in a] == [o.tokens for o in b]
+
+
 # ---------------------------------------------------------------------------
 # scheduling: admission, eviction, mid-stream arrival
 # ---------------------------------------------------------------------------
