@@ -15,6 +15,12 @@ The run doubles as the decode-path integrity smoke for CI:
 * the decode steps must route through the GEMV kernel path (asserted via
   the kernel routing counters).
 
+With ``--table`` a ``repro.tune`` tuning table is loaded first, the
+recorded ratio then reflects *tuned* routing, and the integrity checks
+additionally require every routing decision to carry table provenance
+(the CI ``tune-smoke`` job runs this mode against a freshly generated
+table).
+
 The model is a serving-scaled variant of the paper's BERT_BASE config:
 wide enough (d_model 256, d_ff 4096) that the FFN projections the paper
 sparsifies dominate the decode step, and sized so the n:m:g chunk extent
@@ -86,8 +92,16 @@ def _fallback_traces() -> dict:
     }
 
 
-def _check_decode_path() -> dict:
-    """Assert the sparse run's kernel-routing evidence; return it."""
+def _check_decode_path(tuned: bool = False) -> dict:
+    """Assert the sparse run's kernel-routing evidence; return it.
+
+    Default routing must send decode steps through the GEMV path (the
+    shipped heuristic).  With a tuning table loaded the direction is
+    whatever the measurements said — the integrity requirements become
+    that every projection still routed through a registered nmg path (no
+    dense fallback) and that every routing decision actually came from
+    the table (a quiet fallback to defaults here would silently unplug
+    the tuner this job exists to exercise)."""
     fallbacks = _fallback_traces()
     if fallbacks:
         raise SystemExit(
@@ -95,16 +109,44 @@ def _check_decode_path() -> dict:
             f"{fallbacks}"
         )
     kc = kops.kernel_counters()
-    gemv = sum(v for (kern, _), v in kc.items() if kern == "nmg_gemv")
-    if gemv == 0:
-        raise SystemExit(
-            "fig11_serve: no decode step routed to the nmg_gemv path "
-            f"(kernel counters: {kc})"
-        )
+    if tuned:
+        routes = [k for k in kc if k[0] in ("nmg_linear", "nmg_matmul")]
+        if not routes:
+            raise SystemExit(
+                f"fig11_serve: no routed nmg traces (kernel counters: {kc})"
+            )
+        untuned = [k for k in routes if not k[1].endswith("[table]")]
+        if untuned:
+            raise SystemExit(
+                "fig11_serve: --table was given but these routing "
+                f"decisions fell back to defaults: {untuned} — the table "
+                "does not cover the serving shape buckets"
+            )
+    else:
+        gemv = sum(v for (kern, _), v in kc.items() if kern == "nmg_gemv")
+        if gemv == 0:
+            raise SystemExit(
+                "fig11_serve: no decode step routed to the nmg_gemv path "
+                f"(kernel counters: {kc})"
+            )
     return kc
 
 
-def main(quick=False, out_json=OUT_JSON):
+def main(quick=False, out_json=OUT_JSON, table=None):
+    from repro.tune import load_table_cli
+
+    # explicit --table only: this benchmark's integrity gates differ
+    # between tuned and untuned routing, so a stray $REPRO_TUNE_TABLE in
+    # the environment must not silently flip the run's mode
+    tuning = load_table_cli(table) if table else None
+    if tuning is not None and len(tuning) == 0:
+        # distinguish "no section for this device" from the
+        # missing-shape-buckets abort the provenance gate would raise
+        raise SystemExit(
+            f"fig11_serve: {table} has no entries for device "
+            f"{tuning.device} — generate one here with "
+            f"`python -m repro.tune --quick --out {table}`"
+        )
     cfg = serving_cfg()
     # enough decode chunks that the p50 token gap is a stable statistic
     # (each chunk contributes decode_chunk near-identical gaps)
@@ -137,7 +179,7 @@ def main(quick=False, out_json=OUT_JSON):
             for label, (outs, met) in run.items():
                 if met.tok_latency_p50 < results[label][1].tok_latency_p50:
                     results[label] = (outs, met)
-    kernel_paths = _check_decode_path()
+    kernel_paths = _check_decode_path(tuned=tuning is not None)
 
     print("mode,requests,tokens,ttft_p50_ms,tok_p50_ms,tok_p99_ms,tok_s")
     payload = {
@@ -156,9 +198,13 @@ def main(quick=False, out_json=OUT_JSON):
             "quick": bool(quick),
         },
         # trace-time routing evidence: every sparse projection dispatched
-        # to a registered nmg kernel, decode steps took the GEMV path
+        # to a registered nmg kernel, decode steps took the GEMV path; the
+        # ("nmg_linear", "<path>[table|default]") entries show whether the
+        # routing decisions came from a tuning table or shipped defaults
         "kernel_paths": {"/".join(k): v for k, v in kernel_paths.items()},
         "dense_fallback_traces": 0,
+        "tuning_table": table or None,
+        "tuning_entries": len(tuning) if tuning is not None else 0,
     }
     for label, (outs, met) in results.items():
         payload[label] = met.to_dict()
@@ -181,5 +227,8 @@ def main(quick=False, out_json=OUT_JSON):
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--table", default=None, metavar="PATH",
+                    help="load a repro.tune tuning table before serving, "
+                         "so the recorded ratio reflects tuned routing")
     args = ap.parse_args()
-    main(quick=args.quick)
+    main(quick=args.quick, table=args.table)

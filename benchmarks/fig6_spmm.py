@@ -10,42 +10,33 @@ For a serving-shaped 1:4:8 weight (gr-row-shared), times
 * ``dense`` — the XLA dense matmul baseline on the same shapes,
 
 at M in {1, 2, 4, 8, 16, 64, 128} — decode batches at the narrow end,
-prefill tiles at the wide end.  The crossover this sweep exposes is what
-the shape router (``nmg_matmul`` / ``DECODE_M_MAX``) encodes.
+prefill tiles at the wide end.  The sweep and timing machinery is
+``repro.tune.bench`` (:func:`~repro.tune.bench.sweep_m` /
+:func:`~repro.tune.bench.time_us`) — the same code the autotuner runs, so
+this figure and the tuning table can never disagree about what was
+measured.  The **measured gemv/spmm crossover M** — the empirical value
+of the router's ``decode_m_max`` for this shape — is computed from the
+sweep and recorded alongside the raw timings.
 
 Run standalone (prints CSV) or through ``benchmarks/run.py``, which merges
-the per-(path, M) ``us_per_call`` records this module returns into
-``BENCH_bench.json``.
+the per-(path, M) ``us_per_call`` records (and the crossover record) this
+module returns into ``BENCH_bench.json``.
 
     PYTHONPATH=src python -m benchmarks.fig6_spmm [--quick]
 """
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import nmg
 from repro.kernels import ops as kops
+from repro.tune import bench
 
 # serving-shaped weight: sparse along the input axis, rows shared gr-wide
 N_, M_, G_, GR_ = 1, 4, 8, 64
 K, N_OUT = 1024, 1024
-
-
-def _time_us(fn, *args, reps: int, inner: int = 5) -> float:
-    """Median-of-``reps`` wall time of ``inner`` back-to-back calls (us)."""
-    jax.block_until_ready(fn(*args))  # compile outside the timed region
-    best = []
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        for _ in range(inner):
-            out = fn(*args)
-        jax.block_until_ready(out)
-        best.append((time.perf_counter() - t0) / inner)
-    best.sort()
-    return best[len(best) // 2] * 1e6
 
 
 def main(quick=False):
@@ -54,28 +45,31 @@ def main(quick=False):
     key = jax.random.PRNGKey(0)
     w = jax.random.normal(key, (K, N_OUT), jnp.float32)
     t = nmg.dense_to_grouped_nm(w, n=N_, m=M_, g=G_, gr=GR_, sparse_dim=0)
-    wd = t.to_dense()  # identical nonzeros for the dense baseline
+    fmt_str = f"{N_}:{M_}:{G_} gr{GR_} K{K} N{N_OUT}"
 
-    gemv = jax.jit(lambda a, b: kops.nmg_gemv_xla(a, b))
-    spmm = jax.jit(lambda a, b: kops.nmg_spmm_xla(a, b))
-    dense = jax.jit(lambda b, w: (b.T @ w).T)
+    sweep = bench.sweep_m(t, key, ms, reps=reps, include_dense=True)
 
     records = []
     print("path,M,us_per_call")
-    for m in ms:
-        b = jax.random.normal(jax.random.fold_in(key, m), (K, m), jnp.float32)
-        for path, fn, args in (
-            ("gemv", gemv, (t, b)),
-            ("spmm", spmm, (t, b)),
-            ("dense", dense, (b, wd)),
-        ):
-            us = _time_us(fn, *args, reps=reps)
-            records.append({
-                "name": f"fig6_spmm/{path}_M{m}",
-                "us_per_call": us,
-                "derived": f"{N_}:{M_}:{G_} gr{GR_} K{K} N{N_OUT}",
-            })
-            print(f"{path},{m},{us:.1f}")
+    for r in sweep:
+        records.append({
+            "name": f"fig6_spmm/{r['path']}_M{r['M']}",
+            "us_per_call": r["us"],
+            "derived": fmt_str,
+        })
+        print(f"{r['path']},{r['M']},{r['us']:.1f}")
+
+    # the empirical decode_m_max for this shape — what `python -m
+    # repro.tune` would write into the table's matching bucket, and what
+    # the shipped DECODE_M_MAX default approximates
+    crossover = bench.measured_crossover(sweep)
+    records.append({
+        "name": "fig6_spmm/gemv_spmm_crossover_M",
+        "crossover_M": crossover,
+        "shipped_default": kops.DECODE_M_MAX,
+        "derived": fmt_str,
+    })
+    print(f"crossover,{crossover},(shipped default {kops.DECODE_M_MAX})")
     return records
 
 

@@ -9,7 +9,11 @@ latency breakdown by construction.
 Lookup order (mirrors Fig 3):
   1. exact registered implementation for (op, input-layout signature);
   2. lossless conversion of inputs to a registered signature (minimum number
-     of conversions; never lossy — paper §4.4);
+     of conversions; never lossy — paper §4.4).  Ties among candidates that
+     need the same number of conversions are broken by the *measured*
+     conversion costs of the active tuning table when one is installed
+     (``set_conversion_cost_model`` — ``repro.tune`` wires this up), and by
+     registration order otherwise;
   3. dense fallback: densify all operands, call the reference dense op, and
      warn (``warnings.warn`` with ``SparseFallbackWarning``).
 
@@ -54,6 +58,8 @@ __all__ = [
     "sparse_op_table",
     "dispatch_counters",
     "reset_dispatch_counters",
+    "set_conversion_cost_model",
+    "conversion_cost_model",
 ]
 
 
@@ -70,10 +76,13 @@ _DENSE_OPS: dict[str, Callable] = {}
 #: external callables patched into the dispatcher (paper §4.4 patching API)
 _PATCHED: dict[Callable, str] = {}
 
-# dispatch-outcome telemetry: ("impl" | "dense_fallback", op, sig) -> count.
-# Dispatch happens at *trace* time, so these count compilations, not calls
-# — which is exactly the no-fallback evidence the serving perf smoke wants
-# ("did any projection in this run trace through the dense fallback?").
+# dispatch-outcome telemetry:
+# ("impl" | "dense_fallback" | "cost_model_override", op, sig) -> count
+# ("cost_model_override" marks a conversion tie the measured-cost model
+# decided differently from registration order).  Dispatch happens at
+# *trace* time, so these count compilations, not calls — which is exactly
+# the no-fallback evidence the serving perf smoke wants ("did any
+# projection in this run trace through the dense fallback?").
 _DISPATCH_COUNTS: collections.Counter = collections.Counter()
 
 
@@ -90,6 +99,28 @@ def _count_dispatch(outcome: str, op_name: str, sig: tuple) -> None:
     _DISPATCH_COUNTS[
         (outcome, op_name, tuple(c.__name__ for c in sig))
     ] += 1
+
+
+# Conversion-cost model: optional callable (src_cls, dst_cls) -> float|None
+# breaking ties among conversion candidates that need the same *number* of
+# conversions.  None (the default, and for unmeasured pairs) keeps the
+# historical registration-order tie-break, so installing a model can only
+# refine — never contradict — the fewest-conversions rule.
+_CONVERSION_COST: Optional[Callable[[type, type], Optional[float]]] = None
+
+
+def set_conversion_cost_model(
+    fn: Optional[Callable[[type, type], Optional[float]]]
+) -> None:
+    """Install (or clear, with None) the conversion-cost tie-breaker.
+    ``repro.tune.routing.conversion_cost`` is the intended model: measured
+    lossless-conversion costs from the active tuning table."""
+    global _CONVERSION_COST
+    _CONVERSION_COST = fn
+
+
+def conversion_cost_model():
+    return _CONVERSION_COST
 
 
 def _canonical_name(op) -> str:
@@ -177,21 +208,38 @@ def _find_impl(op_name: str, sig: tuple, inline: type | None):
         if name != op_name or inl is not inline or len(s) != len(sig):
             continue
         nconv = 0
+        cost: Optional[float] = 0.0  # None once any needed pair is unmeasured
         ok = True
         for have, want in zip(sig, s):
             if have is want:
                 continue
             if want in conv.lossless_targets(have):
                 nconv += 1
+                c = (_CONVERSION_COST(have, want)
+                     if _CONVERSION_COST is not None else None)
+                cost = None if (c is None or cost is None) \
+                    else cost + float(c)
             else:
                 ok = False
                 break
         if ok:
-            candidates.append((nconv, s, impl))
+            candidates.append((nconv, cost, s, impl))
     if not candidates:
         return None, None
-    candidates.sort(key=lambda t: t[0])
-    _, target_sig, impl = candidates[0]
+    # fewest conversions always wins; min() takes the first minimum, so
+    # registration order breaks ties exactly as it always has
+    best_n = min(t[0] for t in candidates)
+    pool = [t for t in candidates if t[0] == best_n]
+    chosen = pool[0]
+    # measured costs refine the tie only when every tied candidate is fully
+    # measured: costs are microseconds, so comparing a measured sum against
+    # a candidate with unmeasured (unknown-cost) conversions would be
+    # unit-nonsense — incomparable ties keep registration order
+    if len(pool) > 1 and all(t[1] is not None for t in pool):
+        chosen = min(pool, key=lambda t: t[1])
+        if chosen[3] is not pool[0][3]:
+            _count_dispatch("cost_model_override", op_name, sig)
+    _, _, target_sig, impl = chosen
     return impl, target_sig
 
 

@@ -370,6 +370,14 @@ class FixedMaskTensor(SparsityLayout):
 # n:m (un-grouped) — e.g. NVIDIA 2:4
 # ---------------------------------------------------------------------------
 
+# The three pattern-table memoizations below are deliberately *unbounded*
+# (contrast the LRU-bounded jitted-closure caches in repro/serve): each
+# entry is a tiny read-only numpy constant — O(C(m,n) * max(n, m)) ints —
+# keyed by the handful of (n, m[, g]) formats a process ever uses, holds
+# no device buffers or compiled programs, and is consulted on every
+# conversion and kernel trace, so eviction could only ever trade a few
+# hundred bytes for rebuild work on a hot path.
+
 
 @functools.lru_cache(maxsize=None)
 def nm_patterns(n: int, m: int) -> np.ndarray:

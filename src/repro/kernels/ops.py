@@ -9,18 +9,29 @@ kernel choice depends on format *and* operand shape):
 
   right operand        path                       regime
   -----------------    ------------------------   -------------------------
-  M <= DECODE_M_MAX    ``nmg_gemv``  (decode)     serving decode GEMV: tiny
+  M <= decode_m_max    ``nmg_gemv``  (decode)     serving decode GEMV: tiny
                                                   activation batch, weight-
                                                   stationary, dtype epilogue
-  M >  DECODE_M_MAX    ``nmg_spmm``  (prefill)    wide right operand, column
+  M >  decode_m_max    ``nmg_spmm``  (prefill)    wide right operand, column
                                                   tiled, f32 accumulator out
+
+The routing decisions — the gemv/spmm crossover ``decode_m_max``, the
+spmm gathered-block cap, and the Pallas gemv tile config — come from
+``repro.tune.routing``: a lookup into the active
+:class:`~repro.tune.table.TuningTable` (device kind + shape bucket) with
+shipped defaults (``DECODE_M_MAX``, ``_SPMM_BLOCK_ELEMS`` below) that
+reproduce the historical hard-coded heuristics exactly when no table is
+loaded.  A table changes only *which* path runs, never its output.
+Lookups happen at trace time, so load tables before compiling consumers
+(the serving warmup hook does this in the right order).
 
 Both paths consume the :class:`~repro.core.layouts.SpmmPlan` gather plan
 the conversion precomputed (``GroupedNMTensor.gather_plan``) instead of
 re-deriving index math per call.  ``kernel_counters`` records which path
-each *trace* took — the no-dense-fallback evidence the serving perf smoke
-asserts on (dispatch is trace-time, so counters count compilations, not
-calls).
+each *trace* took — including the router's choice and its provenance,
+e.g. ``("nmg_matmul", "gemv[table]")`` — the no-dense-fallback evidence
+the serving perf smoke asserts on (dispatch is trace-time, so counters
+count compilations, not calls).
 """
 
 from __future__ import annotations
@@ -33,6 +44,7 @@ import jax.numpy as jnp
 
 from repro.core.layouts import GroupedNMTensor
 from repro.kernels import ref as kref
+from repro.tune import routing
 from repro.kernels.fused_sparse_matmul import matmul_threshold_pallas
 from repro.kernels.nm_mask import nm_mask_pallas
 from repro.kernels.nmg_gemv import nmg_gemv_pallas
@@ -53,14 +65,17 @@ __all__ = [
     "reset_kernel_counters",
 ]
 
-#: widest right operand still considered decode-shaped (slot batches are
-#: single-token, so M == number of serving slots — a handful)
-DECODE_M_MAX = 16
+#: shipped-default decode width (single source of truth:
+#: ``repro.tune.routing``); the router consults the active tuning table
+#: first and falls back to this, so the name stays importable for code
+#: and docs that reference the heuristic
+DECODE_M_MAX = routing.DEFAULT_DECODE_M_MAX
 
-#: cap on the gathered-operand size (elements) of one XLA spmm block —
-#: bounds peak memory like the old per-group scan did, without its
-#: group-at-a-time serialization
-_SPMM_BLOCK_ELEMS = 1 << 22
+#: shipped-default cap on the gathered-operand size (elements) of one XLA
+#: spmm block — bounds peak memory like the old per-group scan did,
+#: without its group-at-a-time serialization; tuned per device via
+#: ``spmm_block_elems`` table entries
+_SPMM_BLOCK_ELEMS = routing.DEFAULT_SPMM_BLOCK_ELEMS
 
 # (kernel, path) -> number of traces routed there
 _KERNEL_COUNTS: collections.Counter = collections.Counter()
@@ -115,14 +130,24 @@ def _gather_block(b_p, cols, val_g):
     )
 
 
-@jax.jit
-def nmg_spmm_xla(a: GroupedNMTensor, b: jnp.ndarray) -> jnp.ndarray:
+def nmg_spmm_xla(a: GroupedNMTensor, b: jnp.ndarray, *,
+                 block_elems: int | None = None) -> jnp.ndarray:
     """Pure-XLA production path: one batched gather + blocked einsum over
     the precomputed column plan.  Replaces the old per-fiber-group
     ``lax.scan`` (Gr sequential micro-matmuls) with ceil(Gr / block)
     vectorized blocks, where the block size caps the gathered operand at
-    ``_SPMM_BLOCK_ELEMS`` elements (the old scan's memory-safety property,
-    without its serialization)."""
+    ``block_elems`` elements (the old scan's memory-safety property,
+    without its serialization).  ``block_elems`` defaults to the routing
+    lookup (tuned per device; shipped default ``_SPMM_BLOCK_ELEMS``) and
+    is resolved at trace time."""
+    if block_elems is None:
+        block_elems, _ = routing.spmm_block_elems()
+    return _nmg_spmm_xla(a, b, block_elems=int(block_elems))
+
+
+@functools.partial(jax.jit, static_argnames=("block_elems",))
+def _nmg_spmm_xla(a: GroupedNMTensor, b: jnp.ndarray, *,
+                  block_elems: int) -> jnp.ndarray:
     gr = a.gr
     val = a.val                                # [R_pad, nblocks, n]
     R_pad, nblocks, n = val.shape
@@ -134,7 +159,7 @@ def nmg_spmm_xla(a: GroupedNMTensor, b: jnp.ndarray) -> jnp.ndarray:
     val_g = val.reshape(Gr, gr, nblocks * n)
 
     per_group = nblocks * n * N                # gathered elements per group
-    gb = max(1, min(Gr, _SPMM_BLOCK_ELEMS // max(1, per_group)))
+    gb = max(1, min(Gr, block_elems // max(1, per_group)))
     nblk = -(-Gr // gb)
     if nblk == 1:
         out = _gather_block(b_p, cols, val_g)  # [Gr, gr, N]
@@ -173,8 +198,11 @@ def nmg_gemv(a: GroupedNMTensor, b: jnp.ndarray, *, out_dtype=None,
         use_pallas = on_tpu()
     _KERNEL_COUNTS[("nmg_gemv", "pallas" if use_pallas else "xla")] += 1
     if use_pallas:
+        cfg, _ = routing.gemv_pallas_config(**_route_ctx(a, b.dtype))
         out = nmg_gemv_pallas(a, b, out_dtype=out_dtype,
-                              interpret=not on_tpu())
+                              interpret=not on_tpu(),
+                              tm=cfg["tm"],
+                              target_depth=cfg["target_depth"])
         return out.T if transpose_out else out
     return nmg_gemv_xla(a, b, out_dtype=out_dtype,
                         transpose_out=transpose_out)
@@ -217,13 +245,28 @@ def nmg_gemv_xla(a: GroupedNMTensor, b: jnp.ndarray, *, out_dtype=None,
 # ---------------------------------------------------------------------------
 
 
+def _route_ctx(a: GroupedNMTensor, dtype) -> dict:
+    """The routing-lookup context of a sparse operand: contraction extent,
+    output extent, format, row sharing, activation dtype."""
+    sd = a.sparse_dim % 2
+    return dict(K=a.dense_shape[sd], R=a.dense_shape[1 - sd],
+                fmt=(a.n, a.m, a.g), gr=a.gr, dtype=dtype)
+
+
 def nmg_matmul(a: GroupedNMTensor, b: jnp.ndarray, *,
                use_pallas: bool | None = None) -> jnp.ndarray:
     """Shape-routed sparse @ dense: decode-shaped right operands take the
     GEMV path, everything else the column-tiled SpMM.  f32 output either
-    way (the shared kernel contract)."""
-    if b.ndim == 2 and b.shape[1] <= DECODE_M_MAX:
-        return nmg_gemv(a, b, use_pallas=use_pallas)
+    way (the shared kernel contract).  The crossover width comes from the
+    routing table (shipped default ``DECODE_M_MAX``); the chosen path and
+    its provenance land in ``kernel_counters`` as
+    ``("nmg_matmul", "<path>[<table|default>]")``."""
+    if b.ndim == 2:
+        thr, src = routing.decode_m_max(**_route_ctx(a, b.dtype))
+        if b.shape[1] <= thr:
+            _KERNEL_COUNTS[("nmg_matmul", f"gemv[{src}]")] += 1
+            return nmg_gemv(a, b, use_pallas=use_pallas)
+        _KERNEL_COUNTS[("nmg_matmul", f"spmm[{src}]")] += 1
     return nmg_spmm(a, b, use_pallas=use_pallas)
 
 
@@ -243,10 +286,13 @@ def nmg_linear(x: jnp.ndarray, w: GroupedNMTensor, *,
     K = x.shape[-1]
     x2 = x.reshape(-1, K)
     M = x2.shape[0]
-    if M <= DECODE_M_MAX:
+    thr, src = routing.decode_m_max(**_route_ctx(w, x.dtype))
+    if M <= thr:
+        _KERNEL_COUNTS[("nmg_linear", f"gemv[{src}]")] += 1
         y = nmg_gemv(w, x2.T, out_dtype=x.dtype, transpose_out=True,
                      use_pallas=use_pallas)
         return y.reshape(*lead, -1)
+    _KERNEL_COUNTS[("nmg_linear", f"spmm[{src}]")] += 1
     yt = nmg_spmm(w, x2.T, use_pallas=use_pallas)  # f32 [N, M]
     return yt.astype(x.dtype).T.reshape(*lead, -1)
 

@@ -87,7 +87,8 @@ def _run_engine(args, cfg, params, key) -> int:
     if args.sparse:
         n, m, g = (int(v) for v in args.nm.split(":"))
         results = compare_dense_sparse(params, cfg, reqs, nm=(n, m, g),
-                                       engine_kwargs=ekw, warmup=warm)
+                                       engine_kwargs=ekw, warmup=warm,
+                                       tune=args.tune)
         for label, (outs, met) in results.items():
             print(met.report())
         d = results["dense"][1]
@@ -97,7 +98,8 @@ def _run_engine(args, cfg, params, key) -> int:
                   f"{s.tok_latency_p50 / d.tok_latency_p50:.2f}")
     else:
         if warm:
-            warmup_engine(params, cfg, reqs, engine_kwargs=ekw)
+            warmup_engine(params, cfg, reqs, engine_kwargs=ekw,
+                          tune=args.tune)
         eng = ServeEngine(params, cfg, **ekw)
         outs = eng.run(reqs)
         met = eng.metrics(label="dense")
@@ -137,7 +139,27 @@ def main(argv=None):
     ap.add_argument("--no-warmup", action="store_true",
                     help="skip the pre-compile pass; reported latencies "
                          "then include XLA compile stalls")
+    ap.add_argument("--tuning-table", default=None, metavar="PATH",
+                    help="load a repro.tune table (written by "
+                         "`python -m repro.tune`) so kernel routing uses "
+                         "measured decisions instead of shipped defaults")
+    ap.add_argument("--tune", action="store_true",
+                    help="--engine mode: autotune the served shapes "
+                         "during warmup (repro.tune warmup hook)")
     args = ap.parse_args(argv)
+    if args.tune and not args.engine:
+        # the one-shot path has no warmup/tuning hook; accepting the flag
+        # there would report an untuned run as tuned
+        ap.error("--tune requires --engine")
+    if args.tune and args.no_warmup:
+        # tuning happens inside the warmup pass because routing lookups
+        # resolve at trace time; skipping warmup would silently serve
+        # default routing while reporting a "tuned" run
+        ap.error("--tune requires the warmup pass; drop --no-warmup")
+
+    from repro.tune import load_table_cli
+
+    load_table_cli(args.tuning_table)  # --tuning-table or $REPRO_TUNE_TABLE
 
     cfg = get_smoke(args.arch) if args.smoke else get_arch(args.arch)
     key = jax.random.PRNGKey(args.seed)

@@ -188,11 +188,20 @@ def main(argv=None):
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--tuning-table", default=None, metavar="PATH",
+                    help="load a repro.tune table (written by "
+                         "`python -m repro.tune`) before the step "
+                         "compiles, so sparse kernel routing uses "
+                         "measured decisions instead of shipped defaults")
     args = ap.parse_args(argv)
     # the fast path chunks by --log-every; a non-positive value would spin
     # on zero-step chunks forever (and 0 was a ZeroDivisionError before)
     args.log_every = max(1, args.log_every)
     args.ckpt_every = max(1, args.ckpt_every)
+
+    from repro.tune import load_table_cli
+
+    load_table_cli(args.tuning_table)  # --tuning-table or $REPRO_TUNE_TABLE
 
     cfg = get_smoke(args.arch) if args.smoke else get_arch(args.arch)
     key = jax.random.PRNGKey(args.seed)

@@ -29,12 +29,18 @@ from repro.models.common import ModelConfig
 __all__ = ["SlotKVCache", "reset_slot", "gather_slots"]
 
 
-@functools.lru_cache(maxsize=None)
+@functools.lru_cache(maxsize=16)
 def _jit_slot_prefill(cfg: ModelConfig):
     """One jitted slot-prefill per config, shared across caches; jit then
     specializes per (prompt length, param structure).  The cache operand is
     donated: admission updates the slot pool in place instead of copying
-    the whole [max_slots, max_seq_len] pytree."""
+    the whole [max_slots, max_seq_len] pytree.
+
+    Bounded (unlike the read-only pattern tables in ``core/layouts.py``):
+    each entry holds a jitted closure whose executable cache grows per
+    traced prompt length, so an unbounded cache leaks compiled programs in
+    a long-running engine that cycles through many configs.  Eviction of a
+    cold config only costs a recompile if it returns."""
     return jax.jit(
         lambda p, toks, cache, slot, off: prefill_into_slot(
             p, cfg, toks, cache, slot, write_offset=off

@@ -51,7 +51,22 @@ __all__ = ["ServeEngine", "sparsify_for_serving", "compare_dense_sparse",
            "warmup_engine"]
 
 
-@functools.lru_cache(maxsize=None)
+#: bound on the per-config jitted-closure caches below.  Each entry pins a
+#: jitted callable whose own executable cache grows per traced
+#: (param-structure, shape) — in a long-running engine serving many model
+#: configs that accumulates without limit, so unlike the read-only pattern
+#: tables in ``core/layouts.py`` (tiny numpy constants, safe to keep
+#: forever) these caches are LRU-bounded; eviction only costs a recompile
+#: if a config comes back.
+_JIT_CACHE_SIZE = 16
+
+#: default slot-batch size — single source for ``ServeEngine.__init__``
+#: and the warmup tuner's decode-width fallback, which must agree on the
+#: width a default-constructed engine actually decodes at
+DEFAULT_MAX_SLOTS = 8
+
+
+@functools.lru_cache(maxsize=_JIT_CACHE_SIZE)
 def _jit_decode(cfg: ModelConfig):
     """One jitted decode step per config (ModelConfig is frozen/hashable),
     shared across engine instances so a dense-vs-sparse comparison only
@@ -64,7 +79,7 @@ def _jit_decode(cfg: ModelConfig):
     )
 
 
-@functools.lru_cache(maxsize=None)
+@functools.lru_cache(maxsize=2 * _JIT_CACHE_SIZE)  # keyed (cfg, n_steps)
 def _jit_decode_chunk(cfg: ModelConfig, n_steps: int):
     """Jitted multi-token inner decode loop (the serving analogue of
     ``launch/train.py:make_multi_step``): ``n_steps`` decode steps under one
@@ -141,7 +156,8 @@ class ServeEngine:
     clock : timestamp source (injectable for deterministic tests)
     """
 
-    def __init__(self, params, cfg: ModelConfig, *, max_slots: int = 8,
+    def __init__(self, params, cfg: ModelConfig, *,
+                 max_slots: int = DEFAULT_MAX_SLOTS,
                  max_seq_len: int = 256, reset_freed_slots: bool = False,
                  decode_chunk: int = 8,
                  clock: Callable[[], float] = time.perf_counter):
@@ -353,30 +369,61 @@ class ServeEngine:
 
 
 def warmup_engine(params, cfg: ModelConfig, requests, *,
-                  engine_kwargs: Optional[dict] = None) -> None:
+                  engine_kwargs: Optional[dict] = None,
+                  tune: bool = False, tune_reps: int = 3) -> None:
     """Populate the jit caches (one slot-prefill per distinct prompt
     length + the decode step, for this param structure) by serving a tiny
     trace through a throwaway engine, so a measured run reports
-    steady-state latency instead of compile stalls."""
+    steady-state latency instead of compile stalls.
+
+    With ``tune=True`` the warmup first autotunes the kernel routing for
+    the *actual* shapes this engine will serve — each sparse weight's
+    gemv/spmm crossover at the engine's decode width (``max_slots``) and
+    the trace's prompt lengths — and activates the resulting
+    :class:`~repro.tune.table.TuningTable` (merging into any already
+    active), so the compilations this warmup triggers, and every
+    subsequent engine trace, route through measured decisions instead of
+    the shipped defaults.  Tuning must precede compilation because routing
+    lookups happen at trace time; that ordering is the point of hanging
+    the hook here."""
+    ekw = dict(engine_kwargs or {})
+    requests = list(requests)
+    if tune and any(
+        isinstance(leaf, GroupedNMTensor)
+        for leaf in jax.tree_util.tree_leaves(
+            params, is_leaf=lambda x: isinstance(x, GroupedNMTensor))
+    ):
+        from repro.tune.bench import autotune_for_serving
+
+        autotune_for_serving(
+            params,
+            max_slots=ekw.get("max_slots", DEFAULT_MAX_SLOTS),
+            prompt_lens=sorted({int(r.prompt.size) for r in requests}) or [8],
+            dtype=jnp.dtype(cfg.dtype),
+            reps=tune_reps,
+        )
     seen, warm = set(), []
     for r in requests:
         if r.prompt.size not in seen:
             seen.add(r.prompt.size)
             warm.append(Request(uid=-1 - len(warm), prompt=r.prompt,
                                 max_new_tokens=2))
-    ServeEngine(params, cfg, **dict(engine_kwargs or {})).run(warm)
+    ServeEngine(params, cfg, **ekw).run(warm)
 
 
 def compare_dense_sparse(params, cfg: ModelConfig, requests, *,
                          nm: tuple = (1, 4, 16), gr: int = 64,
                          engine_kwargs: Optional[dict] = None,
-                         warmup: bool = False):
+                         warmup: bool = False, tune: bool = False):
     """Serve the same request trace with dense and n:m:g-sparse weights.
 
     Returns {'dense': (outputs, metrics), 'sparse': (outputs, metrics)} —
     the side-by-side numbers of the paper's Fig 11 serving scenario.
     ``warmup`` pre-compiles both variants so the metrics measure serving,
-    not XLA compilation."""
+    not XLA compilation; ``tune`` additionally autotunes the sparse
+    variant's kernel routing for the served shapes during its warmup (see
+    :func:`warmup_engine`; the hook no-ops for the dense variant, which
+    has no routed sparse weights)."""
     engine_kwargs = dict(engine_kwargs or {})
     requests = list(requests)
     results = {}
@@ -385,7 +432,8 @@ def compare_dense_sparse(params, cfg: ModelConfig, requests, *,
         ("sparse", sparsify_for_serving(params, *nm, gr=gr)),
     ):
         if warmup:
-            warmup_engine(p, cfg, requests, engine_kwargs=engine_kwargs)
+            warmup_engine(p, cfg, requests, engine_kwargs=engine_kwargs,
+                          tune=tune)
         eng = ServeEngine(p, cfg, **engine_kwargs)
         outs = eng.run(requests)
         results[label] = (outs, eng.metrics(label=label))

@@ -1,0 +1,51 @@
+"""``repro.tune`` — autotuning & cost-model subsystem.
+
+Replaces the hard-coded kernel-routing constants with measured, persisted
+decisions:
+
+* :mod:`repro.tune.table` — the persistent :class:`TuningTable` (JSON,
+  keyed by device kind + power-of-two shape bucket),
+* :mod:`repro.tune.routing` — lookups with shipped defaults that
+  reproduce the historical heuristics exactly when no table is active
+  (consumed by ``kernels/ops.py`` and ``core/dispatch.py``),
+* :mod:`repro.tune.bench` — the microbenchmark harness and tuners
+  (shared with ``benchmarks/fig6_spmm.py``), including
+  :func:`autotune_for_serving`, the engine warmup hook,
+* ``python -m repro.tune`` — the offline CLI that sweeps the grid and
+  writes the table.
+
+Tables change only *which* registered kernel path runs — never its
+output (``tests/test_tune.py`` pins tuned and heuristic routing to
+bitwise-identical results).
+
+``bench`` imports the kernel modules, so it is intentionally *not*
+imported here: ``kernels/ops.py`` can import ``repro.tune.routing``
+without a cycle.
+"""
+
+from repro.tune.routing import (
+    DEFAULT_DECODE_M_MAX,
+    DEFAULT_GEMV_PALLAS,
+    DEFAULT_SPMM_BLOCK_ELEMS,
+    active_table,
+    clear_active_table,
+    load_table,
+    load_table_cli,
+    set_active_table,
+)
+from repro.tune.table import TuningTable, bucket, device_kind, shape_key
+
+__all__ = [
+    "DEFAULT_DECODE_M_MAX",
+    "DEFAULT_GEMV_PALLAS",
+    "DEFAULT_SPMM_BLOCK_ELEMS",
+    "TuningTable",
+    "active_table",
+    "bucket",
+    "clear_active_table",
+    "device_kind",
+    "load_table",
+    "load_table_cli",
+    "set_active_table",
+    "shape_key",
+]

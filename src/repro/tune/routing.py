@@ -1,0 +1,197 @@
+"""Routing layer: table lookups with shipped defaults.
+
+This module owns the *shipped defaults* that used to live as hard-coded
+constants in ``kernels/ops.py`` (``DECODE_M_MAX = 16``,
+``_SPMM_BLOCK_ELEMS = 1 << 22``) and the Pallas GEMV tile shape, and
+answers every routing question the kernels ask:
+
+* :func:`decode_m_max` — the gemv/spmm crossover width ``nmg_matmul`` /
+  ``nmg_linear`` route on,
+* :func:`spmm_block_elems` — the gathered-operand cap of one XLA spmm
+  block,
+* :func:`gemv_pallas_config` — the Pallas gemv output-tile / contraction
+  depth,
+* :func:`conversion_cost` — measured lossless-conversion costs the
+  dispatcher's tie-breaker consults (``core/dispatch.py``).
+
+Each lookup returns ``(value, source)`` where ``source`` is ``"table"``
+for a hit in the active :class:`~repro.tune.table.TuningTable` and
+``"default"`` otherwise, so callers can surface the provenance in their
+counters.  With no active table every answer is exactly the old
+hard-coded behavior — loading a table is strictly opt-in.
+
+Lookups happen at **trace time** (the kernels read them while JAX traces
+a jitted caller), so a table must be active *before* the consuming
+program compiles; swapping tables does not retrace already-compiled
+programs.  The serving warmup hook (``serve/engine.py:warmup_engine``)
+exists precisely to tune-then-compile in the right order.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+from typing import Optional
+
+from repro.tune.table import TuningTable, shape_key
+
+__all__ = [
+    "DEFAULT_DECODE_M_MAX",
+    "DEFAULT_SPMM_BLOCK_ELEMS",
+    "DEFAULT_GEMV_PALLAS",
+    "ENV_TABLE",
+    "active_table",
+    "set_active_table",
+    "clear_active_table",
+    "load_table",
+    "load_table_cli",
+    "decode_m_max",
+    "spmm_block_elems",
+    "gemv_pallas_config",
+    "conversion_cost",
+]
+
+#: widest right operand still considered decode-shaped when no table is
+#: active (slot batches are single-token, so M == number of serving slots)
+DEFAULT_DECODE_M_MAX = 16
+
+#: default cap on the gathered-operand size (elements) of one XLA spmm
+#: block — bounds peak memory like the old per-group scan did
+DEFAULT_SPMM_BLOCK_ELEMS = 1 << 22
+
+#: default Pallas gemv tile config (lane-width output tile, ~128-deep
+#: packed contractions)
+DEFAULT_GEMV_PALLAS = {"tm": 128, "target_depth": 128}
+
+#: environment variable naming a table file to auto-load (opt-in; read by
+#: :func:`load_table_cli`, which the CLI entry points call)
+ENV_TABLE = "REPRO_TUNE_TABLE"
+
+_ACTIVE: Optional[TuningTable] = None
+
+
+def active_table() -> Optional[TuningTable]:
+    return _ACTIVE
+
+
+def set_active_table(table: Optional[TuningTable]) -> None:
+    """Install ``table`` as the process-wide routing source (None restores
+    the shipped defaults).  Also wires the dispatcher's conversion-cost
+    tie-breaker to the table's measured costs (and unwires it on None)."""
+    global _ACTIVE
+    _ACTIVE = table
+    import importlib
+
+    # module object import: the core package re-exports a *function* named
+    # ``dispatch``, shadowing the submodule on attribute-style imports
+    disp = importlib.import_module("repro.core.dispatch")
+    disp.set_conversion_cost_model(
+        conversion_cost if table is not None else None
+    )
+
+
+def clear_active_table() -> None:
+    set_active_table(None)
+
+
+def load_table(path: str) -> TuningTable:
+    """Load ``path``'s section for the running device and make it active."""
+    table = TuningTable.load(path)
+    set_active_table(table)
+    return table
+
+
+def load_table_cli(path: Optional[str], *, verbose: bool = True
+                   ) -> Optional[TuningTable]:
+    """The CLI entry points' one-stop loader: an explicit ``path`` wins,
+    otherwise ``$REPRO_TUNE_TABLE`` is honored; either way the loaded
+    table is announced — and a dangling env path is warned about —
+    because tuning silently not taking effect is the failure mode this
+    message exists to surface.  Returns None when neither source names a
+    (readable) table."""
+    if path:
+        table, src = load_table(path), path
+    else:
+        env = os.environ.get(ENV_TABLE)
+        if not env:
+            return None
+        # an explicit --tuning-table problem raises; the env spelling
+        # must not crash unrelated commands, but going quiet would leave
+        # the user believing the run was tuned — so warn on a missing,
+        # stale-schema, or corrupt env table and fall back to defaults
+        if not os.path.exists(env):
+            print(f"tuning: ${ENV_TABLE}={env} does not exist — "
+                  f"using shipped defaults", file=sys.stderr)
+            return None
+        try:
+            table = load_table(env)
+        except (OSError, ValueError) as e:
+            print(f"tuning: ${ENV_TABLE}={env} is unreadable ({e}) — "
+                  f"using shipped defaults", file=sys.stderr)
+            return None
+        src = f"${ENV_TABLE}={env}"
+    if verbose:
+        print(f"tuning: loaded {len(table)} entries for {table.device} "
+              f"from {src}")
+    return table
+
+
+# ---------------------------------------------------------------------------
+# lookups
+# ---------------------------------------------------------------------------
+
+
+def _lookup(key: str, default):
+    if _ACTIVE is not None:
+        hit = _ACTIVE.get(key)
+        if hit is not None:
+            return hit, "table"
+    return default, "default"
+
+
+def decode_m_max(*, K: int, R: int, fmt: tuple, gr: int, dtype
+                 ) -> tuple[int, str]:
+    """Widest right operand routed to the GEMV path for this shape bucket.
+    Exact-bucket hit, else the device-wide ``decode_m_max`` override, else
+    the shipped default."""
+    val, src = _lookup(
+        shape_key("decode_m_max", K=K, R=R, fmt=fmt, gr=gr, dtype=dtype),
+        None,
+    )
+    if val is None:
+        val, src = _lookup("decode_m_max", DEFAULT_DECODE_M_MAX)
+    return int(val), src
+
+
+def spmm_block_elems() -> tuple[int, str]:
+    """Gathered-operand element cap per XLA spmm block (device-wide: the
+    cap protects peak memory, which does not depend on the shape bucket
+    or dtype)."""
+    val, src = _lookup("spmm_block_elems", DEFAULT_SPMM_BLOCK_ELEMS)
+    return int(val), src
+
+
+def gemv_pallas_config(*, K: int, R: int, fmt: tuple, gr: int, dtype
+                       ) -> tuple[dict, str]:
+    """Pallas gemv tile config {tm, target_depth} for this shape bucket."""
+    val, src = _lookup(
+        shape_key("gemv_pallas", K=K, R=R, fmt=fmt, gr=gr, dtype=dtype),
+        None,
+    )
+    if val is None:
+        val, src = _lookup("gemv_pallas", DEFAULT_GEMV_PALLAS)
+    cfg = dict(DEFAULT_GEMV_PALLAS)
+    cfg.update(val)
+    return cfg, src
+
+
+def conversion_cost(src_cls: type, dst_cls: type) -> Optional[float]:
+    """Measured cost (us) of a lossless ``src -> dst`` conversion, or None
+    when the active table has no measurement.  ``core/dispatch.py`` uses
+    this to break ties among conversion candidates that need the same
+    *number* of conversions; with no table (or no measurement) the
+    dispatcher keeps its registration-order tie-break, so default behavior
+    is unchanged."""
+    if _ACTIVE is None or src_cls is dst_cls:
+        return None
+    return _ACTIVE.get(f"convert_cost/{src_cls.__name__}->{dst_cls.__name__}")

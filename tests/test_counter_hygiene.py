@@ -1,0 +1,104 @@
+"""Counter hygiene: the autouse conftest fixture must isolate the
+trace-time telemetry (``dispatch_counters`` / ``kernel_counters``) and the
+active tuning table between tests.
+
+The two ``test_counter_bleed_*`` twins are the regression proper: each
+performs one counted operation and asserts the *exact total* count.  If the
+fixture ever stops resetting, whichever twin runs second sees the first
+twin's counts and fails — i.e. two counter-asserting tests cannot bleed
+into each other in either execution order.
+"""
+
+import importlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import nmg
+from repro.kernels import ops as kops
+from repro.tune import TuningTable, routing
+
+disp = importlib.import_module("repro.core.dispatch")
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _one_routed_matmul():
+    x = jax.random.normal(KEY, (8, 96))
+    t = nmg.dense_to_grouped_nm(x, n=1, m=4, g=4, gr=2)
+    kops.nmg_matmul(t, jnp.ones((96, 4)), use_pallas=False)
+
+
+def _one_sparse_dispatch():
+    x = jax.random.normal(KEY, (8, 96))
+    t = nmg.dense_to_grouped_nm(x, n=1, m=4, g=4, gr=2)
+    disp.dispatch("matmul", t, jnp.ones((96, 4)))
+
+
+def test_counter_bleed_first_twin():
+    """One routed matmul => exactly one gemv trace counted (would see 2 if
+    the other twin's counts leaked in)."""
+    _one_routed_matmul()
+    counts = kops.kernel_counters()
+    assert sum(v for (kern, _), v in counts.items()
+               if kern == "nmg_gemv") == 1, counts
+
+
+def test_counter_bleed_second_twin():
+    """Identical to the first twin; passing in both execution orders is
+    the no-bleed evidence."""
+    _one_routed_matmul()
+    counts = kops.kernel_counters()
+    assert sum(v for (kern, _), v in counts.items()
+               if kern == "nmg_gemv") == 1, counts
+
+
+def test_dispatch_counter_bleed_first_twin():
+    _one_sparse_dispatch()
+    counts = disp.dispatch_counters()
+    assert sum(v for k, v in counts.items() if k[0] == "impl") == 1, counts
+
+
+def test_dispatch_counter_bleed_second_twin():
+    _one_sparse_dispatch()
+    counts = disp.dispatch_counters()
+    assert sum(v for k, v in counts.items() if k[0] == "impl") == 1, counts
+
+
+def test_fixture_clears_active_tuning_table_first():
+    """Install a table; the fixture must have removed it by the next test
+    (twin below asserts the default state)."""
+    assert routing.active_table() is None
+    routing.set_active_table(TuningTable.for_device())
+    assert routing.active_table() is not None
+
+
+def test_fixture_clears_active_tuning_table_second():
+    assert routing.active_table() is None
+    # and the dispatcher's cost-model hook was unwired with it
+    assert disp.conversion_cost_model() is None
+
+
+def test_reset_helpers_clear_everything():
+    """The reset functions themselves (what the fixture calls) empty the
+    counters."""
+    _one_routed_matmul()
+    _one_sparse_dispatch()
+    assert kops.kernel_counters() and disp.dispatch_counters()
+    kops.reset_kernel_counters()
+    disp.reset_dispatch_counters()
+    assert kops.kernel_counters() == {}
+    assert disp.dispatch_counters() == {}
+
+
+def test_counted_results_unaffected_by_counters():
+    """Sanity: counting is pure telemetry — the routed result equals the
+    reference regardless of counter state."""
+    x = jax.random.normal(KEY, (8, 96))
+    t = nmg.dense_to_grouped_nm(x, n=1, m=4, g=4, gr=2)
+    b = jax.random.normal(jax.random.PRNGKey(8), (96, 4))
+    want = np.asarray(t.to_dense() @ b)
+    for _ in range(2):  # second call: counters already non-empty
+        got = np.asarray(kops.nmg_matmul(t, b, use_pallas=False))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

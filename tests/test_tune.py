@@ -1,0 +1,503 @@
+"""`repro.tune` subsystem tests.
+
+The load-bearing guarantees:
+
+* **Defaults-compat** — with no active table every routing answer equals
+  the historical hard-coded heuristic (``DECODE_M_MAX = 16``,
+  ``_SPMM_BLOCK_ELEMS = 1 << 22``, Pallas tile defaults), so behavior
+  without a cache is exactly the seed behavior.
+* **Bitwise differential** — a table may only change *which* kernel runs:
+  over a (M, K, N, n:m:g, gr, dtype) grid, outputs under route-flipping
+  tables are bitwise-equal to the heuristic outputs, on both the
+  ``nmg_matmul`` and ``nmg_linear`` entry points, and for every spmm
+  block size.
+* **Plumbing** — table persistence/device sectioning, counter provenance
+  (``[table]`` vs ``[default]``), the CLI, the dispatcher's
+  conversion-cost tie-breaker, and the serving warmup hook.
+"""
+
+import dataclasses
+import importlib
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import nmg
+from repro.kernels import ops as kops
+from repro.tune import (
+    TuningTable,
+    bucket,
+    routing,
+    shape_key,
+)
+from repro.tune import bench as tbench
+
+disp = importlib.import_module("repro.core.dispatch")
+
+KEY = jax.random.PRNGKey(11)
+
+
+def _tensor(R, K, fmt, gr, *, sparse_dim=1):
+    n, m, g = fmt
+    x = jax.random.normal(KEY, (R, K) if sparse_dim == 1 else (K, R))
+    return nmg.dense_to_grouped_nm(x, n=n, m=m, g=g, gr=gr,
+                                   sparse_dim=sparse_dim)
+
+
+def _flip_table(t, dtype, value):
+    """A table that pins this tensor's decode_m_max bucket to ``value``."""
+    tab = TuningTable.for_device()
+    sd = t.sparse_dim % 2
+    tab.put(shape_key("decode_m_max", K=t.dense_shape[sd],
+                      R=t.dense_shape[1 - sd], fmt=(t.n, t.m, t.g),
+                      gr=t.gr, dtype=dtype), value)
+    return tab
+
+
+# ---------------------------------------------------------------------------
+# defaults-compat: no table => seed heuristics, exactly
+# ---------------------------------------------------------------------------
+
+
+def test_no_table_reproduces_shipped_heuristics():
+    assert routing.active_table() is None
+    thr, src = routing.decode_m_max(K=96, R=8, fmt=(1, 4, 4), gr=2,
+                                    dtype=jnp.float32)
+    assert (thr, src) == (routing.DEFAULT_DECODE_M_MAX, "default")
+    assert thr == kops.DECODE_M_MAX == 16
+    blk, src = routing.spmm_block_elems()
+    assert (blk, src) == (routing.DEFAULT_SPMM_BLOCK_ELEMS, "default")
+    assert blk == kops._SPMM_BLOCK_ELEMS == 1 << 22
+    cfg, src = routing.gemv_pallas_config(K=96, R=8, fmt=(1, 4, 4), gr=2,
+                                          dtype=jnp.float32)
+    assert (cfg, src) == (routing.DEFAULT_GEMV_PALLAS, "default")
+    assert disp.conversion_cost_model() is None
+
+
+def test_no_table_router_boundary_matches_constant():
+    """The router's decode/prefill boundary without a cache sits exactly at
+    the historical DECODE_M_MAX."""
+    t = _tensor(8, 96, (1, 4, 4), 2)
+    kops.nmg_matmul(t, jnp.ones((96, kops.DECODE_M_MAX)), use_pallas=False)
+    kops.nmg_matmul(t, jnp.ones((96, kops.DECODE_M_MAX + 1)),
+                    use_pallas=False)
+    counts = kops.kernel_counters()
+    assert counts.get(("nmg_matmul", "gemv[default]")) == 1
+    assert counts.get(("nmg_matmul", "spmm[default]")) == 1
+    assert counts.get(("nmg_gemv", "xla")) == 1
+    assert counts.get(("nmg_spmm", "xla")) == 1
+
+
+# ---------------------------------------------------------------------------
+# bitwise differential: tuned routing == heuristic routing, to the bit
+# ---------------------------------------------------------------------------
+
+FMT_GRID = [(1, 4, 4, 2), (2, 4, 2, 4), (2, 4, 16, 8), (3, 6, 1, 2)]
+SHAPE_GRID = [(16, 192), (5, 100)]
+M_GRID = (1, 4, 16, 17, 64)
+
+
+@pytest.mark.parametrize("fmt", FMT_GRID,
+                         ids=lambda f: "{}:{}:{}gr{}".format(*f))
+@pytest.mark.parametrize("shape", SHAPE_GRID,
+                         ids=lambda s: "x".join(map(str, s)))
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16],
+                         ids=["f32", "bf16"])
+def test_tuned_matmul_bitwise_equals_heuristic(fmt, shape, dtype):
+    """Force the route the heuristic would NOT take at every M in the grid:
+    the result must not change by a single bit."""
+    n, m, g, gr = fmt
+    R, K = shape
+    t = _tensor(R, K, (n, m, g), gr)
+    for M in M_GRID:
+        b = jax.random.normal(jax.random.fold_in(KEY, M), (K, M)
+                              ).astype(dtype)
+        routing.clear_active_table()
+        want = np.asarray(kops.nmg_matmul(t, b, use_pallas=False))
+        # flip: everything to spmm, then everything to gemv
+        for forced in (0, 4096):
+            routing.set_active_table(_flip_table(t, dtype, forced))
+            got = np.asarray(kops.nmg_matmul(t, b, use_pallas=False))
+            np.testing.assert_array_equal(got, want)
+    routing.clear_active_table()
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16],
+                         ids=["f32", "bf16"])
+def test_tuned_linear_bitwise_equals_heuristic(dtype):
+    """Same guarantee on the serving entry point (weight sparse along its
+    input axis, dtype-preserving epilogue vs cast-then-transpose)."""
+    w = _tensor(512, 192, (1, 4, 8), 16, sparse_dim=0)
+    for rows in (1, 4, 16, 17, 64):
+        x = jax.random.normal(jax.random.fold_in(KEY, rows), (rows, 192)
+                              ).astype(dtype)
+        routing.clear_active_table()
+        want = np.asarray(kops.nmg_linear(x, w, use_pallas=False))
+        for forced in (0, 4096):
+            routing.set_active_table(_flip_table(w, dtype, forced))
+            got = np.asarray(kops.nmg_linear(x, w, use_pallas=False))
+            assert got.dtype == want.dtype == dtype
+            np.testing.assert_array_equal(got, want)
+    routing.clear_active_table()
+
+
+def test_tuned_spmm_block_bitwise_equals_default():
+    """The spmm gathered-block cap is a pure scheduling knob: every block
+    size (including degenerate 1-element blocks) produces the default
+    result to the bit."""
+    t = _tensor(16, 192, (2, 4, 2), 4)
+    b = jax.random.normal(jax.random.fold_in(KEY, 1), (192, 64))
+    want = np.asarray(kops.nmg_spmm_xla(t, b, block_elems=1 << 22))
+    for blk in (1, 1 << 10, 1 << 14, 1 << 26):
+        np.testing.assert_array_equal(
+            np.asarray(kops.nmg_spmm_xla(t, b, block_elems=blk)), want)
+    # and through the table lookup
+    tab = TuningTable.for_device()
+    tab.put("spmm_block_elems", 1 << 10)
+    routing.set_active_table(tab)
+    np.testing.assert_array_equal(np.asarray(kops.nmg_spmm_xla(t, b)), want)
+
+
+def test_gemv_pallas_config_sweep_exactness():
+    """Pallas gemv tile configs drop or duplicate no values: on
+    exact-arithmetic (small-integer) inputs every (tm, target_depth)
+    config agrees bit for bit, and on real-valued inputs ``tm`` (pure
+    output padding) is still bitwise-neutral while ``target_depth`` — an
+    accumulation-chunking knob that reassociates the f32 sum, same caveat
+    as pallas-vs-xla — stays within the kernel tolerance."""
+    from repro.kernels.nmg_gemv import nmg_gemv_pallas
+
+    rng = np.random.default_rng(0)
+    xi = jnp.asarray(rng.integers(-4, 5, size=(8, 96)), jnp.float32)
+    ti = nmg.dense_to_grouped_nm(xi, n=1, m=4, g=4, gr=2)
+    bi = jnp.asarray(rng.integers(-4, 5, size=(96, 4)), jnp.float32)
+    want_i = np.asarray(nmg_gemv_pallas(ti, bi, interpret=True))
+    for tm in (8, 64, 128):
+        for depth in (4, 64, 256):
+            got = np.asarray(nmg_gemv_pallas(ti, bi, tm=tm,
+                                             target_depth=depth,
+                                             interpret=True))
+            np.testing.assert_array_equal(got, want_i)
+
+    t = _tensor(8, 96, (1, 4, 4), 2)
+    b = jax.random.normal(jax.random.fold_in(KEY, 2), (96, 4))
+    want = np.asarray(nmg_gemv_pallas(t, b, interpret=True))
+    for tm in (8, 64):  # output-tile width: padding only, bitwise
+        np.testing.assert_array_equal(
+            np.asarray(nmg_gemv_pallas(t, b, tm=tm, interpret=True)), want)
+    for depth in (4, 256):  # reassociation: tolerance, not bitwise
+        np.testing.assert_allclose(
+            np.asarray(nmg_gemv_pallas(t, b, target_depth=depth,
+                                       interpret=True)),
+            want, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# table mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_bucketing():
+    assert bucket(1) == 1
+    assert bucket(2) == 2
+    assert bucket(3) == 4
+    assert bucket(96) == 128
+    assert bucket(1024) == 1024
+    assert bucket(1025) == 2048
+    k1 = shape_key("decode_m_max", K=1000, R=1024, fmt=(1, 4, 8), gr=64,
+                   dtype=jnp.float32)
+    k2 = shape_key("decode_m_max", K=1024, R=600, fmt=(1, 4, 8), gr=64,
+                   dtype=jnp.float32)
+    assert k1 == k2  # both bucket to K1024/R1024
+
+
+def test_table_save_load_roundtrip(tmp_path):
+    path = str(tmp_path / "table.json")
+    tab = TuningTable(device="cpu:cpu", entries={"decode_m_max": 24},
+                      meta={"note": "test"})
+    tab.save(path)
+    # another device's section must survive a read-modify-write
+    other = TuningTable(device="tpu:tpu_v5e", entries={"decode_m_max": 8})
+    other.save(path)
+    back = TuningTable.load(path, device="cpu:cpu")
+    assert back.entries == {"decode_m_max": 24}
+    assert back.meta == {"note": "test"}
+    assert TuningTable.load(path, device="tpu:tpu_v5e").entries == {
+        "decode_m_max": 8}
+    # unknown device: empty section, defaults apply
+    empty = TuningTable.load(path, device="gpu:h100")
+    assert len(empty) == 0
+    routing.set_active_table(empty)
+    thr, src = routing.decode_m_max(K=96, R=8, fmt=(1, 4, 4), gr=2,
+                                    dtype=jnp.float32)
+    assert (thr, src) == (kops.DECODE_M_MAX, "default")
+
+
+def test_table_schema_mismatch_rejected(tmp_path):
+    path = tmp_path / "bad.json"
+    path.write_text(json.dumps({"schema": 999, "devices": {}}))
+    with pytest.raises(ValueError, match="schema"):
+        TuningTable.load(str(path))
+
+
+def test_device_wide_override_and_bucket_precedence():
+    tab = TuningTable.for_device()
+    tab.put("decode_m_max", 3)  # device-wide
+    routing.set_active_table(tab)
+    thr, src = routing.decode_m_max(K=96, R=8, fmt=(1, 4, 4), gr=2,
+                                    dtype=jnp.float32)
+    assert (thr, src) == (3, "table")
+    # an exact bucket entry beats the device-wide one
+    tab.put(shape_key("decode_m_max", K=96, R=8, fmt=(1, 4, 4), gr=2,
+                      dtype=jnp.float32), 9)
+    thr, src = routing.decode_m_max(K=96, R=8, fmt=(1, 4, 4), gr=2,
+                                    dtype=jnp.float32)
+    assert (thr, src) == (9, "table")
+
+
+def test_route_counters_show_table_provenance():
+    t = _tensor(8, 96, (1, 4, 4), 2)
+    routing.set_active_table(_flip_table(t, jnp.float32, 2))
+    kops.nmg_matmul(t, jnp.ones((96, 2)), use_pallas=False)   # <= 2: gemv
+    kops.nmg_matmul(t, jnp.ones((96, 8)), use_pallas=False)   # > 2: spmm
+    counts = kops.kernel_counters()
+    assert counts.get(("nmg_matmul", "gemv[table]")) == 1
+    assert counts.get(("nmg_matmul", "spmm[table]")) == 1
+
+
+# ---------------------------------------------------------------------------
+# microbench harness
+# ---------------------------------------------------------------------------
+
+
+def test_measured_crossover():
+    def rec(m, g, s):
+        return [{"path": "gemv", "M": m, "us": g},
+                {"path": "spmm", "M": m, "us": s}]
+
+    recs = (rec(1, 1.0, 2.0)        # gemv wins
+            + rec(8, 2.0, 2.01)     # within tolerance: tie counts as win
+            + rec(32, 9.0, 3.0)     # first loss
+            + rec(64, 9.0, 1.0))    # second consecutive loss: crossover
+    assert tbench.measured_crossover(recs) == 8
+    # spmm wins twice from the start: gemv never holds the route
+    assert tbench.measured_crossover(rec(32, 9.0, 3.0)
+                                     + rec(64, 9.0, 1.0)) == 0
+    # one noisy loss at the narrow end must not zero the threshold while
+    # gemv wins at the widths that follow
+    noisy = (rec(1, 3.0, 1.0)       # noise spike
+             + rec(4, 1.0, 2.0) + rec(8, 1.0, 2.0)
+             + rec(16, 9.0, 3.0) + rec(32, 9.0, 3.0))
+    assert tbench.measured_crossover(noisy) == 8
+    # a loss closing the sweep still ends the scan
+    assert tbench.measured_crossover(rec(1, 1.0, 2.0)
+                                     + rec(4, 9.0, 3.0)
+                                     + rec(8, 9.0, 3.0)) == 1
+
+
+def test_tune_decode_threshold_writes_bucketed_entry():
+    tab = TuningTable.for_device()
+    got = tbench.tune_decode_threshold(tab, K=96, R=16, fmt=(1, 4, 4),
+                                       gr=2, ms=(1, 4), reps=1)
+    key = shape_key("decode_m_max", K=96, R=16, fmt=(1, 4, 4), gr=2,
+                    dtype=jnp.float32)
+    assert tab.get(key) == got
+    assert got in (0, 1, 4)
+
+
+def test_cli_quick_produces_consumable_table(tmp_path, monkeypatch):
+    """End-to-end: the CLI writes a table whose entries drive the router
+    (grids shrunk so the test stays fast; the CI tune-smoke job runs the
+    real --quick grid)."""
+    from repro.tune import __main__ as cli
+
+    monkeypatch.setattr(cli, "SHAPES_QUICK", ((96, 16),))
+    monkeypatch.setattr(cli, "FMTS_QUICK", ((1, 4, 4, 2),))
+    monkeypatch.setattr(cli, "MS_QUICK", (1, 4, 8))
+    # the real spmm-block probe is deliberately large (it must make the
+    # candidate caps compile differently); shrink it for test speed
+    real_tune_spmm = tbench.tune_spmm_block
+    monkeypatch.setattr(
+        cli.bench, "tune_spmm_block",
+        lambda table, **kw: real_tune_spmm(
+            table, K=96, R=16, N=16, fmt=(1, 4, 4), gr=2,
+            candidates=(1 << 10, 1 << 12), reps=1),
+    )
+    path = str(tmp_path / "tune_table.json")
+    assert cli.main(["--quick", "--skip-convert", "--out", path]) == 0
+
+    tab = routing.load_table(path)
+    key = shape_key("decode_m_max", K=96, R=16, fmt=(1, 4, 4), gr=2,
+                    dtype=jnp.float32)
+    assert key in tab
+    assert "spmm_block_elems" in tab
+    # the loaded table drives the router with "table" provenance
+    t = _tensor(16, 96, (1, 4, 4), 2)
+    thr, src = routing.decode_m_max(K=96, R=16, fmt=(1, 4, 4), gr=2,
+                                    dtype=jnp.float32)
+    assert src == "table" and thr == tab.get(key)
+    kops.nmg_matmul(t, jnp.ones((96, 4)), use_pallas=False)
+    assert any(k[0] == "nmg_matmul" and k[1].endswith("[table]")
+               for k in kops.kernel_counters())
+
+
+def test_env_var_table_loading(tmp_path, monkeypatch):
+    """$REPRO_TUNE_TABLE is honored by the CLI loader when no explicit
+    path is given, and an explicit path wins over it."""
+    env_path = str(tmp_path / "env_table.json")
+    TuningTable(device=routing.TuningTable.for_device().device,
+                entries={"decode_m_max": 5}).save(env_path)
+    arg_path = str(tmp_path / "arg_table.json")
+    TuningTable(device=routing.TuningTable.for_device().device,
+                entries={"decode_m_max": 7}).save(arg_path)
+
+    monkeypatch.delenv(routing.ENV_TABLE, raising=False)
+    assert routing.load_table_cli(None, verbose=False) is None
+    assert routing.active_table() is None
+
+    monkeypatch.setenv(routing.ENV_TABLE, env_path)
+    tab = routing.load_table_cli(None, verbose=False)
+    assert tab is not None and tab.get("decode_m_max") == 5
+    assert routing.active_table() is tab
+
+    tab = routing.load_table_cli(arg_path, verbose=False)
+    assert tab.get("decode_m_max") == 7
+
+    # a corrupt or stale-schema env table warns and falls back to defaults
+    # instead of crashing unrelated commands (an explicit path still raises)
+    bad = tmp_path / "bad.json"
+    bad.write_text("{ not json")
+    monkeypatch.setenv(routing.ENV_TABLE, str(bad))
+    routing.clear_active_table()
+    assert routing.load_table_cli(None, verbose=False) is None
+    assert routing.active_table() is None
+    bad.write_text(json.dumps({"schema": 999, "devices": {}}))
+    assert routing.load_table_cli(None, verbose=False) is None
+    with pytest.raises(ValueError):
+        routing.load_table_cli(str(bad), verbose=False)
+
+
+# ---------------------------------------------------------------------------
+# dispatcher conversion-cost tie-breaker
+# ---------------------------------------------------------------------------
+
+
+def test_dispatch_cost_model_breaks_conversion_ties():
+    """Two candidate implementations each one lossless conversion away
+    from a FixedMask operand: registration order wins without a cost
+    model, the measured-cheaper conversion wins with one, and clearing the
+    table restores registration order."""
+    from repro.core.layouts import (CooTensor, CsrTensor, DenseTensor,
+                                    FixedMaskTensor)
+
+    calls = []
+
+    @disp.register_op_impl("tune_probe_op", inp=(CsrTensor, DenseTensor))
+    def _csr_impl(a, b):
+        calls.append("csr")
+        return jnp.zeros(())
+
+    @disp.register_op_impl("tune_probe_op", inp=(CooTensor, DenseTensor))
+    def _coo_impl(a, b):
+        calls.append("coo")
+        return jnp.zeros(())
+
+    try:
+        fm = FixedMaskTensor.from_dense(jnp.eye(4))
+        x = jnp.ones((4, 4))
+        disp.dispatch("tune_probe_op", fm, x)
+        assert calls == ["csr"]  # registration order
+
+        # partial measurement: only the Coo conversion has a cost.  Costs
+        # are microseconds — comparing a measured sum against an unknown
+        # is unit-nonsense, so the tie stays with registration order.
+        tab = TuningTable.for_device()
+        tab.put("convert_cost/FixedMaskTensor->CooTensor", 1.0)
+        routing.set_active_table(tab)
+        calls.clear()
+        disp.dispatch("tune_probe_op", fm, x)
+        assert calls == ["csr"]
+        assert not any(k[0] == "cost_model_override"
+                       for k in disp.dispatch_counters())
+
+        tab.put("convert_cost/FixedMaskTensor->CsrTensor", 100.0)
+        routing.set_active_table(tab)
+        calls.clear()
+        disp.dispatch("tune_probe_op", fm, x)
+        assert calls == ["coo"]  # fully measured tie: cheaper wins
+        assert any(k[0] == "cost_model_override"
+                   for k in disp.dispatch_counters())
+
+        routing.clear_active_table()
+        calls.clear()
+        disp.dispatch("tune_probe_op", fm, x)
+        assert calls == ["csr"]
+    finally:
+        for k in [k for k in disp.sparse_op_table()
+                  if k[0] == "tune_probe_op"]:
+            del disp._OP_IMPLS[k]
+
+
+# ---------------------------------------------------------------------------
+# serving warmup hook
+# ---------------------------------------------------------------------------
+
+
+def test_warmup_hook_tunes_engine_shapes():
+    """The warmup hook tunes the engine's actual weight shapes, activates
+    the table, and the traces the warmup triggers route with table
+    provenance — and serve the same tokens the default routing serves.
+
+    Routing lookups (and the counters) happen at *trace* time, so the
+    default-routing reference runs first at one slot count and the tuned
+    engine at another: distinct decode shapes force fresh traces under
+    each routing regime (reusing one shape would replay cached
+    executables and show nothing).
+    """
+    from repro.configs import get_smoke
+    from repro.models import init_lm
+    from repro.serve import Request, ServeEngine
+    from repro.serve.engine import sparsify_for_serving, warmup_engine
+
+    cfg = dataclasses.replace(get_smoke("bert-base-sten"), dtype="float32")
+    params = init_lm(KEY, cfg)
+    sparse = sparsify_for_serving(params, n=1, m=4, g=2, gr=4)
+    prompt = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(3), (8,), 0, cfg.vocab, jnp.int32))
+
+    def serve_once(max_slots):
+        eng = ServeEngine(sparse, cfg, max_slots=max_slots, max_seq_len=16,
+                          decode_chunk=2)
+        outs = eng.run([Request(uid=0, prompt=prompt, max_new_tokens=4)])
+        assert len(outs) == 1
+        return outs[0].tokens
+
+    # reference: default routing at max_slots=2
+    assert routing.active_table() is None
+    want = serve_once(2)
+    routed = [k for k in kops.kernel_counters() if k[0] == "nmg_linear"]
+    assert routed and all(k[1].endswith("[default]") for k in routed)
+
+    # tune + warm at max_slots=3 (fresh decode shapes => fresh traces)
+    kops.reset_kernel_counters()
+    reqs = [Request(uid=9, prompt=prompt, max_new_tokens=4)]
+    warmup_engine(sparse, cfg, reqs,
+                  engine_kwargs=dict(max_slots=3, max_seq_len=16,
+                                     decode_chunk=2),
+                  tune=True, tune_reps=1)
+    tab = routing.active_table()
+    assert tab is not None
+    # one decode_m_max entry per distinct sparse-weight shape: the smoke
+    # config's wi [64, 128] and wo [128, 64]
+    tuned = [k for k in tab.entries if k.startswith("decode_m_max/")]
+    assert len(tuned) == 2, tab.entries
+    routed = [k for k in kops.kernel_counters() if k[0] == "nmg_linear"]
+    assert routed and all(k[1].endswith("[table]") for k in routed), (
+        kops.kernel_counters()
+    )
+
+    # tuned serving == default-routing serving, token for token
+    assert serve_once(3) == want
