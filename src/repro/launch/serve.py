@@ -83,6 +83,14 @@ def _run_engine(args, cfg, params, key) -> int:
     max_seq = args.prompt_len + args.gen_len
     ekw = dict(max_slots=args.max_slots, max_seq_len=max_seq,
                decode_chunk=args.decode_chunk)
+    if args.paged:
+        if max_seq % args.page_size:
+            ap_err = (f"--page-size {args.page_size} must divide "
+                      f"max_seq_len {max_seq} (prompt-len + gen-len)")
+            raise SystemExit(ap_err)
+        ekw.update(paged=True, page_size=args.page_size,
+                   num_pages=args.num_pages,
+                   prefix_sharing=not args.no_prefix_sharing)
     warm = not args.no_warmup
     if args.sparse:
         n, m, g = (int(v) for v in args.nm.split(":"))
@@ -106,8 +114,15 @@ def _run_engine(args, cfg, params, key) -> int:
         print(met.report())
         results = {"dense": (outs, met)}
     n_served = len(next(iter(results.values()))[0])
+    kind = "paged" if args.paged else "slot"
     print(f"served {n_served} requests through "
-          f"{args.max_slots}-slot continuous batching")
+          f"{args.max_slots}-slot continuous batching ({kind} KV cache)")
+    if args.paged and not args.sparse:
+        kv = eng.kv.stats
+        print(f"paged KV: peak {kv['peak_pages_in_use']} pages in use, "
+              f"{kv['shared_tokens']} prompt tokens prefix-shared, "
+              f"{kv['cow_copies']} copy-on-write page copies, "
+              f"{eng.stats['preemptions']} preemptions")
     return 0
 
 
@@ -136,6 +151,18 @@ def main(argv=None):
                     help="decode steps per jit call in --engine mode "
                          "(device-resident greedy inner loop; 1 = the "
                          "per-token host-paced reference)")
+    ap.add_argument("--paged", action="store_true",
+                    help="--engine mode: paged KV cache (page-table "
+                         "indirection + copy-on-write prefix sharing) "
+                         "instead of one full-length row per slot")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (--paged); must divide "
+                         "prompt-len + gen-len")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="page-pool size (--paged); default sizes the "
+                         "pool to the slot cache's KV footprint")
+    ap.add_argument("--no-prefix-sharing", action="store_true",
+                    help="--paged: disable content-hash prefix sharing")
     ap.add_argument("--no-warmup", action="store_true",
                     help="skip the pre-compile pass; reported latencies "
                          "then include XLA compile stalls")
@@ -147,6 +174,9 @@ def main(argv=None):
                     help="--engine mode: autotune the served shapes "
                          "during warmup (repro.tune warmup hook)")
     args = ap.parse_args(argv)
+    if args.paged and not args.engine:
+        ap.error("--paged requires --engine (the one-shot path has no "
+                 "slot scheduler to page)")
     if args.tune and not args.engine:
         # the one-shot path has no warmup/tuning hook; accepting the flag
         # there would report an untuned run as tuned

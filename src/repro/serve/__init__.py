@@ -1,8 +1,17 @@
 """repro.serve — continuous-batching sparse serving engine (paper Fig 11
-as a service: slot-based scheduling, per-slot KV caches, dense vs n:m:g
-weights side by side)."""
+as a service: slot-based scheduling, per-slot KV caches — slot-pool or
+paged with copy-on-write prefix sharing — dense vs n:m:g weights side by
+side)."""
 
-from repro.serve.cache import SlotKVCache, gather_slots, reset_slot
+from repro.serve.cache import (
+    PagedKVCache,
+    PromptTooLongError,
+    SlotKVCache,
+    gather_slots,
+    paged_commit,
+    paged_view,
+    reset_slot,
+)
 from repro.serve.engine import (
     ServeEngine,
     compare_dense_sparse,
@@ -11,21 +20,27 @@ from repro.serve.engine import (
 )
 from repro.serve.metrics import ServeMetrics, summarize
 from repro.serve.queue import (
+    PageAllocator,
     Request,
     RequestOutput,
     RequestQueue,
     SamplingParams,
+    prefix_hashes,
     sample_token,
 )
 
 __all__ = [
     "ServeEngine",
     "SlotKVCache",
+    "PagedKVCache",
+    "PageAllocator",
+    "PromptTooLongError",
     "ServeMetrics",
     "Request",
     "RequestOutput",
     "RequestQueue",
     "SamplingParams",
+    "prefix_hashes",
     "sample_token",
     "summarize",
     "sparsify_for_serving",
@@ -33,4 +48,6 @@ __all__ = [
     "warmup_engine",
     "reset_slot",
     "gather_slots",
+    "paged_view",
+    "paged_commit",
 ]

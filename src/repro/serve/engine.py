@@ -42,7 +42,8 @@ from repro.core.layouts import GroupedNMTensor
 from repro.core.sparsifiers import GroupedNMSparsifier
 from repro.models import decode_step
 from repro.models.common import ModelConfig
-from repro.serve.cache import SlotKVCache
+from repro.serve.cache import PagedKVCache, PromptTooLongError, \
+    SlotKVCache, paged_commit, paged_view
 from repro.serve.metrics import ServeMetrics, summarize
 from repro.serve.queue import Request, RequestOutput, RequestQueue, \
     sample_token
@@ -102,6 +103,54 @@ def _jit_decode_chunk(cfg: ModelConfig, n_steps: int):
     return jax.jit(chunk, donate_argnums=(2,))
 
 
+@functools.lru_cache(maxsize=_JIT_CACHE_SIZE)
+def _jit_paged_decode(cfg: ModelConfig, page_size: int, num_pages: int):
+    """Paged analogue of :func:`_jit_decode`: gather the slot-major
+    logical cache out of the page pool through the table, run the
+    *unchanged* ``decode_step`` on it, and commit only the one written
+    token row per slot back to its physical page.  The pool is donated —
+    the gather/commit pair updates it in place."""
+
+    def step(p, tok, pool, table, pos):
+        view = paged_view(cfg, pool, table, page_size)
+        logits, view = decode_step(p, cfg, tok, view, pos)
+        pool = paged_commit(cfg, pool, view, table, pos, 1, page_size,
+                            num_pages)
+        return logits, pool
+
+    return jax.jit(step, donate_argnums=(2,))
+
+
+@functools.lru_cache(maxsize=2 * _JIT_CACHE_SIZE)
+def _jit_paged_decode_chunk(cfg: ModelConfig, page_size: int,
+                            num_pages: int, n_steps: int):
+    """Paged analogue of :func:`_jit_decode_chunk`: one gather, ``n_steps``
+    decode steps over the slot-major view under ``lax.scan`` (the exact
+    loop the slot cache runs, so greedy tokens match it bitwise), then one
+    commit of the ``n_steps`` written rows per slot.  The engine
+    guarantees (via ``ensure_writable_range``) that every mapped page in
+    the write range is private before this runs; unmapped/overshoot
+    destinations resolve to the sentinel page and are dropped."""
+
+    def chunk(p, tok, pool, table, pos):
+        view = paged_view(cfg, pool, table, page_size)
+
+        def body(carry, _):
+            tok, view, pv = carry
+            logits, view = decode_step(p, cfg, tok, view, pv)
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+            return (nxt[:, None], view, pv + 1), nxt
+
+        (_, view, _), toks = jax.lax.scan(
+            body, (tok, view, pos), None, length=n_steps
+        )
+        pool = paged_commit(cfg, pool, view, table, pos, n_steps,
+                            page_size, num_pages)
+        return toks, pool
+
+    return jax.jit(chunk, donate_argnums=(2,))
+
+
 def sparsify_for_serving(params, n: int = 1, m: int = 4, g: int = 16,
                          gr: int = 64):
     """Convert FFN weights to the n:m:g inference layout (paper §5.3:
@@ -154,26 +203,65 @@ class ServeEngine:
         reference loop; any non-greedy active request also falls back to it
         (host-side RNG sampling keeps per-request streams batch-independent).
     clock : timestamp source (injectable for deterministic tests)
+    paged : back the KV cache with :class:`PagedKVCache` instead of
+        :class:`SlotKVCache`.  Decode runs the same ``decode_step`` over a
+        gathered slot-major view of the page pool, so outputs match the
+        slot cache token-for-token; what changes is capacity — with
+        ``num_pages`` oversubscribed relative to
+        ``max_slots * max_seq_len / page_size``, short prompts and shared
+        prefixes let many more concurrent requests fit the same memory.
+        Admission that cannot get pages *defers* (the request returns to
+        the queue head; live slots are never corrupted) and a decode step
+        that cannot get pages preempts the youngest slot, whose request is
+        re-served from scratch (identical output: greedy decoding, and
+        non-greedy streams restart their seeded RNG).
+    page_size, num_pages, prefix_sharing : forwarded to
+        :class:`PagedKVCache` when ``paged``.
     """
 
     def __init__(self, params, cfg: ModelConfig, *,
                  max_slots: int = DEFAULT_MAX_SLOTS,
                  max_seq_len: int = 256, reset_freed_slots: bool = False,
                  decode_chunk: int = 8,
-                 clock: Callable[[], float] = time.perf_counter):
+                 clock: Callable[[], float] = time.perf_counter,
+                 paged: bool = False, page_size: int = 16,
+                 num_pages: Optional[int] = None,
+                 prefix_sharing: bool = True):
         self.params = params
         self.cfg = cfg
         self.max_slots = max_slots
         self.max_seq_len = max_seq_len
         self.reset_freed_slots = reset_freed_slots
         self.decode_chunk = max(1, decode_chunk)
-        self.kv = SlotKVCache(cfg, max_slots, max_seq_len)
+        self.paged = paged
         self.queue = RequestQueue()
-        self._decode = _jit_decode(cfg)
-        self._decode_chunk = (
-            _jit_decode_chunk(cfg, self.decode_chunk)
-            if self.decode_chunk > 1 else None
-        )
+        if paged:
+            self.kv = PagedKVCache(cfg, max_slots, max_seq_len,
+                                   page_size=page_size, num_pages=num_pages,
+                                   prefix_sharing=prefix_sharing)
+            self._decode = _jit_paged_decode(cfg, self.kv.page_size,
+                                             self.kv.num_pages)
+            self._decode_chunk = (
+                _jit_paged_decode_chunk(cfg, self.kv.page_size,
+                                        self.kv.num_pages, self.decode_chunk)
+                if self.decode_chunk > 1 else None
+            )
+        else:
+            self.kv = SlotKVCache(cfg, max_slots, max_seq_len)
+            self._decode = _jit_decode(cfg)
+            self._decode_chunk = (
+                _jit_decode_chunk(cfg, self.decode_chunk)
+                if self.decode_chunk > 1 else None
+            )
+        #: scheduler counters (all zero for the slot cache except
+        #: rejected/peak_active): deferred admissions, mid-stream
+        #: preemptions, rejected requests, peak concurrently-active slots
+        self.stats = {"deferred_admissions": 0, "preemptions": 0,
+                      "rejected": 0, "peak_active": 0}
+        # chunked decode falls back to single-step once a lone slot cannot
+        # get a full chunk's pages; cleared when a request finishes (pages
+        # freed) — see _ensure_decode_pages
+        self._force_single = False
         self._slots: list[Optional[_SlotState]] = [None] * max_slots
         # next cache write position per slot == current valid length
         self._pos = np.zeros(max_slots, np.int32)
@@ -197,16 +285,32 @@ class ServeEngine:
 
     # -- request lifecycle ------------------------------------------------
     def submit(self, req: Request) -> None:
-        assert req.prompt.size <= self.max_seq_len, (
-            f"prompt ({req.prompt.size}) exceeds max_seq_len "
-            f"({self.max_seq_len})"
-        )
+        """Enqueue a request.  Over-long prompts are *not* checked here:
+        admission raises :class:`PromptTooLongError`, which the scheduler
+        converts into a ``finish_reason="rejected"`` output — one bad
+        request must not kill the serve loop."""
         self.queue.push(req)
 
-    def _admit(self, slot: int, req: Request, now: float) -> None:
-        """Prefill ``req`` into ``slot`` and sample its first token."""
+    def _reject(self, req: Request, now: float) -> None:
+        self._outputs.append(RequestOutput(
+            uid=req.uid, prompt_len=int(req.prompt.size), tokens=[],
+            finish_reason="rejected", arrival_time=req.arrival_time,
+            admitted_time=now, finish_time=self._now(), token_times=[],
+        ))
+        self.stats["rejected"] += 1
+
+    def _admit(self, slot: int, req: Request, now: float) -> bool:
+        """Prefill ``req`` into ``slot`` and sample its first token.
+        Returns False (leaving the slot free and the cache untouched) when
+        the paged pool cannot supply the prompt's pages; raises
+        :class:`PromptTooLongError` for over-long prompts."""
         prompt = jnp.asarray(req.prompt, jnp.int32)[None]
-        logits = self.kv.write_prefill(self.params, prompt, slot)
+        if self.paged:
+            logits = self.kv.admit(self.params, prompt, slot)
+            if logits is None:
+                return False
+        else:
+            logits = self.kv.write_prefill(self.params, prompt, slot)
         S = int(req.prompt.size)
         # token i (1-based) is written to the cache at position S + i - 1,
         # so generating N tokens needs S + N - 1 <= max_seq_len
@@ -223,6 +327,7 @@ class ServeEngine:
         self._tok[slot] = tok
         if self._stopped(st, tok):
             self._finish(slot)
+        return True
 
     def _stopped(self, st: _SlotState, tok: int) -> bool:
         return tok in st.req.stop_tokens or len(st.tokens) >= st.max_new
@@ -243,8 +348,59 @@ class ServeEngine:
         self._slots[slot] = None
         self._pos[slot] = 0
         self._tok[slot] = 0
-        if self.reset_freed_slots:
+        if self.paged:
+            self.kv.release_slot(slot, zero=self.reset_freed_slots)
+            self._force_single = False  # pages freed; chunks may fit again
+        elif self.reset_freed_slots:
             self.kv.reset(slot)
+
+    def _preempt(self, slot: int) -> None:
+        """Evict an active slot mid-stream: free its pages and return its
+        request to the queue head.  Generated tokens are discarded — the
+        re-served request reproduces them exactly (greedy decoding is
+        deterministic, and non-greedy requests restart their seeded RNG
+        stream), so preemption is invisible in the outputs."""
+        st = self._slots[slot]
+        self.kv.release_slot(slot)
+        self._slots[slot] = None
+        self._pos[slot] = 0
+        self._tok[slot] = 0
+        self.queue.push_front(st.req)
+        self.stats["preemptions"] += 1
+
+    def _ensure_decode_pages(self, active, n_steps: int):
+        """Before a paged decode of ``n_steps``, make every active slot's
+        write range mapped and private (allocating growth pages,
+        copy-on-writing shared ones).  When the pool runs dry the
+        *youngest* active slot is preempted and the rest retry — oldest
+        requests keep their pages, matching the admission order the queue
+        would re-serve anyway.  Returns the surviving slots, or None when
+        a lone slot cannot fit a multi-step chunk (the caller then falls
+        back to single-step decode, which needs at most one new page).  A
+        lone slot that cannot get even one page is rejected outright —
+        its prompt fits but prompt + one generated token cannot, and with
+        nothing left to preempt it would requeue forever."""
+        pending = sorted(active,
+                         key=lambda s: (self._slots[s].admitted_time, s))
+        ok: list = []
+        while pending:
+            slot = pending[0]
+            if self.kv.ensure_writable_range(slot, int(self._pos[slot]),
+                                             n_steps):
+                ok.append(pending.pop(0))
+                continue
+            if not ok and len(pending) == 1:
+                if n_steps > 1:
+                    return None  # retry as single-step before evicting
+                st = self._slots[slot]
+                self.kv.release_slot(slot)
+                self._slots[slot] = None
+                self._pos[slot] = 0
+                self._tok[slot] = 0
+                self._reject(st.req, st.admitted_time)
+                break
+            self._preempt(pending.pop())
+        return sorted(ok)
 
     # -- the engine loop --------------------------------------------------
     def step(self) -> int:
@@ -255,28 +411,50 @@ class ServeEngine:
         engine idled)."""
         now = self._now()
         produced = 0
-        for slot in self.free_slots():
+        free = self.free_slots()
+        while free:
             req = self.queue.pop_ready(now)
             if req is None:
                 break
-            self._admit(slot, req, now)
+            try:
+                admitted = self._admit(free[0], req, now)
+            except PromptTooLongError:
+                self._reject(req, now)
+                continue  # slot stays free for the next ready request
+            if not admitted:
+                # out of pages: the request returns to the queue head and
+                # admission stops — live slots are untouched, and pages
+                # will free up as active requests finish
+                self.queue.push_front(req)
+                self.stats["deferred_admissions"] += 1
+                break
+            free.pop(0)
             produced += 1  # the first token sampled from prefill logits
         active = [i for i, s in enumerate(self._slots) if s is not None]
+        self.stats["peak_active"] = max(self.stats["peak_active"],
+                                        len(active))
         if not active:
             return produced
-        if self._decode_chunk is not None and all(
-            self._slots[s].req.sampling.greedy for s in active
-        ):
+        if (self._decode_chunk is not None and not self._force_single
+                and all(self._slots[s].req.sampling.greedy for s in active)):
             return produced + self._step_chunked(active)
         return produced + self._step_single(active)
 
     def _step_single(self, active) -> int:
         """Per-token reference path: one decode step, host-side sampling."""
         produced = 0
+        if self.paged:
+            active = self._ensure_decode_pages(active, 1)
+            if not active:
+                return 0
         tok = jnp.asarray(self._tok[:, None])
         pos = jnp.asarray(self._pos)
-        logits, self.kv.data = self._decode(self.params, tok, self.kv.data,
-                                            pos)
+        if self.paged:
+            logits, self.kv.data = self._decode(
+                self.params, tok, self.kv.data, self.kv.device_table(), pos)
+        else:
+            logits, self.kv.data = self._decode(self.params, tok,
+                                                self.kv.data, pos)
         logits_np = np.asarray(logits)
         t = self._now()
         for slot in active:
@@ -306,11 +484,28 @@ class ServeEngine:
         chunk's tokens (the stream's average decode cadence)."""
         produced = 0
         T = self.decode_chunk
+        if self.paged:
+            active = self._ensure_decode_pages(active, T)
+            if active is None:
+                # a lone slot can't fit a whole chunk's pages: degrade to
+                # the one-page-at-a-time path until a finish frees pages
+                self._force_single = True
+                active = [i for i, s in enumerate(self._slots)
+                          if s is not None]
+                return self._step_single(active) if active else 0
+            if not active:
+                return 0
         t0 = self._now()
-        toks, self.kv.data = self._decode_chunk(
-            self.params, jnp.asarray(self._tok[:, None]), self.kv.data,
-            jnp.asarray(self._pos),
-        )
+        if self.paged:
+            toks, self.kv.data = self._decode_chunk(
+                self.params, jnp.asarray(self._tok[:, None]), self.kv.data,
+                self.kv.device_table(), jnp.asarray(self._pos),
+            )
+        else:
+            toks, self.kv.data = self._decode_chunk(
+                self.params, jnp.asarray(self._tok[:, None]), self.kv.data,
+                jnp.asarray(self._pos),
+            )
         toks_np = np.asarray(toks)  # [T, max_slots] — one host sync
         t1 = self._now()
         for slot in active:

@@ -29,6 +29,7 @@ class ServeMetrics:
     label: str
     num_requests: int
     num_tokens: int
+    num_rejected: int
     wall_time: float
     ttft_p50: float
     ttft_p99: float
@@ -66,8 +67,11 @@ def summarize(outputs: Iterable, wall_time: float, *,
     TTFT is first-token time minus arrival."""
     outputs = list(outputs)
     ttfts, gaps, req_lat = [], [], []
-    n_tok = 0
+    n_tok, n_rej = 0, 0
     for o in outputs:
+        if o.finish_reason == "rejected":
+            n_rej += 1  # no tokens, no timestamps — excluded from stats
+            continue
         n_tok += len(o.tokens)
         ttfts.append(o.ttft)
         req_lat.append(o.latency)
@@ -75,8 +79,9 @@ def summarize(outputs: Iterable, wall_time: float, *,
         gaps.extend(b - a for a, b in zip(ts[:-1], ts[1:]))
     return ServeMetrics(
         label=label,
-        num_requests=len(outputs),
+        num_requests=len(outputs) - n_rej,
         num_tokens=n_tok,
+        num_rejected=n_rej,
         wall_time=wall_time,
         ttft_p50=_pct(ttfts, 50),
         ttft_p99=_pct(ttfts, 99),

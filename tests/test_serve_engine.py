@@ -28,7 +28,17 @@ KEY = jax.random.PRNGKey(0)
 def setup():
     cfg = dataclasses.replace(get_smoke("bert-base-sten"), dtype="float32")
     params = init_lm(KEY, cfg)
-    return cfg, params
+    yield cfg, params
+    # drop this module's compiled engine variants (same rationale as
+    # test_paged_cache.py: keep the long single-process suite from
+    # accumulating executables)
+    from repro.serve import cache as _cache, engine as _engine
+    for mod in (_cache, _engine):
+        for fn in vars(mod).values():
+            clear = getattr(fn, "cache_clear", None)
+            if clear is not None:
+                clear()
+    jax.clear_caches()
 
 
 def make_prompt(length, seed=0, vocab=512):
@@ -400,6 +410,88 @@ def test_engine_ring_cache_window_model():
                       max_seq_len=len(long_prompt) + G)
     outs = eng.run([Request(uid=0, prompt=long_prompt, max_new_tokens=G)])
     assert outs[0].tokens == want
+
+
+# ---------------------------------------------------------------------------
+# paged engine: admission under page pressure, preemption, rejection
+# ---------------------------------------------------------------------------
+
+
+def test_out_of_pages_admission_queues_not_corrupts(setup):
+    """A request that cannot get pages at admission is deferred (returned
+    to the queue head) and served later — the requests already decoding in
+    live slots produce exactly their unconstrained outputs."""
+    cfg, params = setup
+    reqs = lambda: [  # noqa: E731 — the slot-isolation trace, reused
+        Request(uid=0, prompt=make_prompt(10, seed=3, vocab=cfg.vocab),
+                max_new_tokens=5),
+        Request(uid=10, prompt=make_prompt(12, seed=100, vocab=cfg.vocab),
+                max_new_tokens=7),
+        Request(uid=11, prompt=make_prompt(11, seed=101, vocab=cfg.vocab),
+                max_new_tokens=7),
+        Request(uid=12, prompt=make_prompt(13, seed=102, vocab=cfg.vocab),
+                max_new_tokens=7),
+    ]
+    want = [(o.uid, o.tokens) for o in
+            ServeEngine(params, cfg, max_slots=4, max_seq_len=20).run(reqs())]
+    # 10 pages of 4 tokens: two ~4-page requests fit, the rest must defer
+    eng = ServeEngine(params, cfg, max_slots=4, max_seq_len=20,
+                      paged=True, page_size=4, num_pages=10,
+                      prefix_sharing=False)
+    got = [(o.uid, o.tokens) for o in eng.run(reqs())]
+    assert got == want
+    assert eng.stats["deferred_admissions"] > 0
+    assert eng.stats["rejected"] == 0
+    assert eng.kv.alloc.pages_in_use() == 0  # fully drained
+
+
+def test_mid_stream_eviction_under_paging(setup):
+    """Decode-time page exhaustion (prompts fit, growth does not) preempts
+    the youngest slot, whose request is re-served from scratch — outputs
+    still match the slot engine exactly."""
+    cfg, params = setup
+    reqs = lambda: [  # noqa: E731
+        Request(uid=i, prompt=make_prompt(7 + i, seed=200 + i,
+                                          vocab=cfg.vocab),
+                max_new_tokens=9) for i in range(3)
+    ]
+    want = [(o.uid, o.tokens) for o in
+            ServeEngine(params, cfg, max_slots=3, max_seq_len=20,
+                        decode_chunk=4).run(reqs())]
+    # 8 pages * 3 tokens = 24 token-rows: three 7-9 token prompts admit,
+    # but 9 generated tokens each cannot all fit -> mid-stream preemption
+    eng = ServeEngine(params, cfg, max_slots=3, max_seq_len=21,
+                      decode_chunk=4, paged=True, page_size=3, num_pages=8,
+                      prefix_sharing=False)
+    got = [(o.uid, o.tokens) for o in eng.run(reqs())]
+    assert got == want
+    assert eng.stats["preemptions"] > 0
+    assert eng.kv.alloc.pages_in_use() == 0
+
+
+def test_too_long_prompt_rejected_not_fatal(setup):
+    """Regression for the admission assert: an over-capacity prompt is
+    rejected with finish_reason='rejected' while the serve loop keeps
+    running and every well-formed request completes normally — for both
+    cache backends."""
+    cfg, params = setup
+    for kw in ({}, {"paged": True, "page_size": 4}):
+        eng = ServeEngine(params, cfg, max_slots=2, max_seq_len=12, **kw)
+        outs = eng.run([
+            Request(uid=0, prompt=make_prompt(6, seed=1, vocab=cfg.vocab),
+                    max_new_tokens=3),
+            Request(uid=1, prompt=make_prompt(30, seed=2, vocab=cfg.vocab),
+                    max_new_tokens=3),
+            Request(uid=2, prompt=make_prompt(7, seed=3, vocab=cfg.vocab),
+                    max_new_tokens=3),
+        ])
+        by_uid = {o.uid: o for o in outs}
+        assert by_uid[1].finish_reason == "rejected"
+        assert by_uid[1].tokens == []
+        assert len(by_uid[0].tokens) == len(by_uid[2].tokens) == 3
+        met = eng.metrics()
+        assert met.num_rejected == 1 and met.num_requests == 2
+        assert np.isfinite(met.ttft_p50)
 
 
 def test_frozen_clock_does_not_hang():
