@@ -1,0 +1,232 @@
+"""Decode megakernels: fused QKV and fused gated-FFN Pallas launches.
+
+PR 4's decode kernel (:mod:`repro.kernels.nmg_gemv`) wins the serving
+regime but still launches once *per projection* and re-gathers each fiber
+group's activations per launch.  The paper's argument (and the Hoefler et
+al. survey's) is that grouped n:m only pays when the gather cost is
+amortized across the whole operator — so the decode step wants one
+weight-stationary launch per fused operator, not one per weight.
+
+Two fusions, both exploiting n:m:g storage invariants:
+
+* **QKV** (:func:`nmg_qkv_pallas`): ``wq``/``wk``/``wv`` share the
+  contraction axis (d_model) and, when sparsified together, the
+  (n, m, g, gr) format.  Their compressed storage concatenates along the
+  canonical output-row axis — ``val`` on rows, ``blk_idx`` on fiber
+  groups, legal because conversion pads every operand's rows to a ``gr``
+  multiple — so **one** ``gemv_pallas_call`` launch computes all three
+  projections, gathering each fiber group's activation rows once per
+  token.  Per-row contractions are independent and run the identical
+  per-chunk accumulation order as three separate launches, so fused and
+  sequential outputs agree **bitwise** (pinned by tests/test_megakernel).
+* **Gated FFN** (:func:`nmg_ffn_pallas`): the gated-MLP packs ``w1`` and
+  ``gate`` into one ``[D, 2F]`` weight; the fusion is the in-kernel gate
+  epilogue.  The grid walks F/gr output stripes with *two* f32
+  accumulators per step — the ``u`` stripe (rows [f, f+gr)) and its
+  ``v`` partner at row offset +F — and the last chunk step casts both to
+  the activation dtype and emits ``act(u) * v`` directly, exactly the op
+  order ``models/transformer._sublayer_ffn`` runs after a sequential
+  projection (split -> act -> multiply).  silu is bitwise-stable (the
+  logistic lowers to one primitive); approximate-gelu's tanh polynomial
+  may differ by ulps depending on what XLA fuses it with.
+
+Both kernels keep the gemv contract: f32 VMEM scratch accumulation, one
+dtype cast in the epilogue, M padded to the lane width.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.layouts import GroupedNMTensor, nm_patterns
+from repro.kernels.nmg_gemv import gemv_pallas_call
+
+__all__ = [
+    "act_fn",
+    "fusable_qkv",
+    "fusable_ffn",
+    "fused_segments",
+    "nmg_qkv_pallas",
+    "nmg_ffn_pallas",
+]
+
+
+def act_fn(name: str):
+    """The model stack's activation by name (gelu is the tanh approximation
+    ``models/transformer._act`` uses — the fused epilogue must match it
+    bitwise)."""
+    if name == "silu":
+        return jax.nn.silu
+    return functools.partial(jax.nn.gelu, approximate=True)
+
+
+def _canon_R(w: GroupedNMTensor) -> int:
+    return w.dense_shape[1 - (w.sparse_dim % 2)]
+
+
+def fusable_qkv(ws: Sequence) -> bool:
+    """Static (trace-time) eligibility of a projection list for the fused
+    QKV launch: all grouped n:m:g, same (n, m, g, gr) format, same
+    contraction extent, same stored dtype, sparse along the input axis."""
+    if not ws or not all(isinstance(w, GroupedNMTensor) for w in ws):
+        return False
+    w0 = ws[0]
+    for w in ws:
+        if (w.n, w.m, w.g, w.gr) != (w0.n, w0.m, w0.g, w0.gr):
+            return False
+        if w.sparse_dim % 2 != 0:  # canonical view must be [R(out), K(in)]
+            return False
+        if w.dense_shape[0] != w0.dense_shape[0]:  # shared K
+            return False
+        if w.val.shape[1:] != w0.val.shape[1:] or w.val.dtype != w0.val.dtype:
+            return False
+        if w.blk_idx.shape[1:] != w0.blk_idx.shape[1:]:
+            return False
+        if w.val.shape[0] != w.blk_idx.shape[0] * w.gr:  # rows pad to gr
+            return False
+    return True
+
+
+def fusable_ffn(w, F: int) -> bool:
+    """Static eligibility of a packed ``[D, 2F]`` gated-MLP weight for the
+    dual-accumulator kernel: grouped n:m:g, sparse along the input axis,
+    exactly 2F unpadded rows, and the u/v halves splitting on a fiber-group
+    boundary (F divisible by gr)."""
+    if not isinstance(w, GroupedNMTensor) or w.sparse_dim % 2 != 0:
+        return False
+    if _canon_R(w) != 2 * F or F <= 0:
+        return False
+    # no row padding (group boundaries must be real rows) + aligned halves
+    return w.val.shape[0] == 2 * F and F % w.gr == 0
+
+
+def fused_segments(ws: Sequence) -> list:
+    """Per-projection (row offset in the concatenated padded operand,
+    canonical row count) — where each output lands after a fused launch."""
+    segs, off = [], 0
+    for w in ws:
+        segs.append((off, _canon_R(w)))
+        off += w.val.shape[0]
+    return segs
+
+
+def nmg_qkv_pallas(ws: Sequence, b: jnp.ndarray, *, out_dtype=None,
+                   tm: int = 128, interpret: bool = True,
+                   target_depth: int = 128) -> tuple:
+    """All projections of ``ws`` against one decode-shaped ``b`` [K, M] in
+    a single weight-stationary launch.  Returns one [R_i, M] array per
+    projection, in ``out_dtype`` (default f32)."""
+    assert fusable_qkv(ws), "operands not fusable; route per-projection"
+    w0 = ws[0]
+    val = jnp.concatenate([w.val for w in ws], axis=0)
+    blk_idx = jnp.concatenate([w.blk_idx for w in ws], axis=0)
+    out = gemv_pallas_call(val, blk_idx, b, n=w0.n, m=w0.m, g=w0.g,
+                           gr=w0.gr, out_dtype=out_dtype, tm=tm,
+                           interpret=interpret, target_depth=target_depth)
+    return tuple(out[off:off + R] for off, R in fused_segments(ws))
+
+
+def _ffn_kernel(idx_u_ref, idx_v_ref, val_u_ref, val_v_ref, b_ref, o_ref,
+                acc_u_ref, acc_v_ref, *, n, m, g, gr, CG, pats, nchunks,
+                batch_positions, act):
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_u_ref[...] = jnp.zeros_like(acc_u_ref)
+        acc_v_ref[...] = jnp.zeros_like(acc_v_ref)
+
+    # same inner loop as the gemv kernel, run for the stripe's u rows and
+    # its gate partner at +F — one B chunk-slab feeds both contractions
+    for idx_ref, val_ref, acc_ref in (
+        (idx_u_ref, val_u_ref, acc_u_ref),
+        (idx_v_ref, val_v_ref, acc_v_ref),
+    ):
+        vals = val_ref[...].reshape(gr, CG * n)
+        for start in range(0, CG, batch_positions):
+            stop = min(start + batch_positions, CG)
+            rows = []
+            for p in range(start, stop):  # static unroll; pattern p//g static
+                b_loc = idx_ref[0, 0, p] - ki * CG
+                mrows = b_ref[pl.ds(b_loc * m, m), :]
+                rows.extend(mrows[l : l + 1, :] for l in pats[p // g])
+            gathered = jnp.concatenate(rows, axis=0)
+            acc_ref[...] += jnp.dot(
+                vals[:, start * n : stop * n],
+                gathered.astype(vals.dtype),
+                preferred_element_type=jnp.float32,
+            )
+
+    @pl.when(ki == nchunks - 1)
+    def _epilogue():
+        # cast first, gate second — the exact op order the sequential path
+        # runs (projection epilogue cast, then split/act/multiply), so the
+        # fused output is bitwise-identical to it
+        u = acc_u_ref[...].astype(o_ref.dtype)
+        v = acc_v_ref[...].astype(o_ref.dtype)
+        o_ref[...] = act_fn(act)(u) * v
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("act", "out_dtype", "tm", "interpret", "target_depth"),
+)
+def nmg_ffn_pallas(w: GroupedNMTensor, b: jnp.ndarray, *, act: str = "silu",
+                   out_dtype=None, tm: int = 128, interpret: bool = True,
+                   target_depth: int = 128) -> jnp.ndarray:
+    """Gated-MLP pair in one launch: ``w`` is the packed [D, 2F] weight
+    (sparse_dim=0), ``b`` [D, M] the decode activations.  Returns
+    ``act(u) @ gate`` = [F, M] in ``out_dtype`` (default f32)."""
+    n, m, g, gr = w.n, w.m, w.g, w.gr
+    C = math.comb(m, n)
+    CG = C * g
+    pats = [tuple(int(v) for v in row) for row in nm_patterns(n, m)]
+    out_dtype = jnp.dtype(out_dtype) if out_dtype is not None else jnp.float32
+
+    val, blk_idx = w.val, w.blk_idx
+    R_pad, nblocks, _ = val.shape
+    Gr, nchunks, _ = blk_idx.shape
+    F = _canon_R(w) // 2
+    assert fusable_ffn(w, F), "weight not fusable; route per-projection"
+    half = Gr // 2
+    K_pad = nblocks * m
+
+    K, M = b.shape
+    m_pad = min(tm, max(8, M)) if interpret else tm
+    b_p = jnp.pad(b, ((0, K_pad - K), (0, (-M) % m_pad)))
+    M_pad = b_p.shape[1]
+
+    batch_positions = max(1, target_depth // n)
+    grid = (half, nchunks)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _ffn_kernel, n=n, m=m, g=g, gr=gr, CG=CG, pats=pats,
+            nchunks=nchunks, batch_positions=batch_positions, act=act,
+        ),
+        grid=grid,
+        in_specs=[
+            # the stripe's index row and its gate partner at group +half:
+            # the same array twice under shifted index maps
+            pl.BlockSpec((1, 1, CG), lambda gi, ki: (gi, ki, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, CG), lambda gi, ki: (gi + half, ki, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((gr, CG, n), lambda gi, ki: (gi, ki, 0)),
+            pl.BlockSpec((gr, CG, n), lambda gi, ki: (gi + half, ki, 0)),
+            pl.BlockSpec((CG * m, M_pad), lambda gi, ki: (ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((gr, M_pad), lambda gi, ki: (gi, 0)),
+        out_shape=jax.ShapeDtypeStruct((F, M_pad), out_dtype),
+        scratch_shapes=[pltpu.VMEM((gr, M_pad), jnp.float32),
+                        pltpu.VMEM((gr, M_pad), jnp.float32)],
+        interpret=interpret,
+    )(blk_idx, blk_idx, val, val, b_p)
+    return out[:, :M]

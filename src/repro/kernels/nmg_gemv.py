@@ -39,7 +39,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.layouts import GroupedNMTensor, nm_patterns
 
-__all__ = ["nmg_gemv_pallas"]
+__all__ = ["nmg_gemv_pallas", "gemv_pallas_call"]
 
 
 def _kernel(idx_ref, val_ref, b_ref, o_ref, acc_ref, *, n, m, g, gr, CG,
@@ -75,20 +75,29 @@ def _kernel(idx_ref, val_ref, b_ref, o_ref, acc_ref, *, n, m, g, gr, CG,
 
 
 @functools.partial(
-    jax.jit, static_argnames=("out_dtype", "tm", "interpret", "target_depth")
+    jax.jit,
+    static_argnames=("n", "m", "g", "gr", "out_dtype", "tm", "interpret",
+                     "target_depth"),
 )
-def nmg_gemv_pallas(a: GroupedNMTensor, b: jnp.ndarray, *,
-                    out_dtype=None, tm: int = 128, interpret: bool = True,
-                    target_depth: int = 128) -> jnp.ndarray:
-    """C = A_canonical @ B via the decode kernel.  Returns [R, M] in
-    ``out_dtype`` (default: f32, matching the SpMM contract)."""
-    n, m, g, gr = a.n, a.m, a.g, a.gr
+def gemv_pallas_call(val: jnp.ndarray, blk_idx: jnp.ndarray, b: jnp.ndarray,
+                     *, n: int, m: int, g: int, gr: int, out_dtype=None,
+                     tm: int = 128, interpret: bool = True,
+                     target_depth: int = 128) -> jnp.ndarray:
+    """The raw decode-kernel launch on the storage arrays: one
+    ``pallas_call`` over (``val`` [R_pad, nblocks, n], ``blk_idx``
+    [R_pad/gr, nchunks, C*g], ``b`` [K, M]) returning the *uncropped*
+    [R_pad, M] product.
+
+    Factored out of :func:`nmg_gemv_pallas` so the fused megakernels
+    (:mod:`repro.kernels.nmg_fused`) can launch the identical kernel body
+    over row-concatenated operands: every output row's contraction is
+    independent and runs the same per-chunk accumulation order, so fused
+    and per-projection launches agree bitwise by construction."""
     C = math.comb(m, n)
     CG = C * g
     pats = [tuple(int(v) for v in row) for row in nm_patterns(n, m)]
     out_dtype = jnp.dtype(out_dtype) if out_dtype is not None else jnp.float32
 
-    val, blk_idx = a.val, a.blk_idx
     R_pad, nblocks, _ = val.shape
     Gr, nchunks, _ = blk_idx.shape
     K_pad = nblocks * m
@@ -119,8 +128,21 @@ def nmg_gemv_pallas(a: GroupedNMTensor, b: jnp.ndarray, *,
         scratch_shapes=[pltpu.VMEM((gr, M_pad), jnp.float32)],
         interpret=interpret,
     )(blk_idx, val, b_p)
+    return out[:, :M]
 
-    # crop row padding (canonical row count) and column padding
+
+@functools.partial(
+    jax.jit, static_argnames=("out_dtype", "tm", "interpret", "target_depth")
+)
+def nmg_gemv_pallas(a: GroupedNMTensor, b: jnp.ndarray, *,
+                    out_dtype=None, tm: int = 128, interpret: bool = True,
+                    target_depth: int = 128) -> jnp.ndarray:
+    """C = A_canonical @ B via the decode kernel.  Returns [R, M] in
+    ``out_dtype`` (default: f32, matching the SpMM contract)."""
+    out = gemv_pallas_call(a.val, a.blk_idx, b, n=a.n, m=a.m, g=a.g,
+                           gr=a.gr, out_dtype=out_dtype, tm=tm,
+                           interpret=interpret, target_depth=target_depth)
+    # crop row padding (canonical row count)
     sd = a.sparse_dim % 2
     R = a.dense_shape[1 - sd]
-    return out[:R, :M]
+    return out[:R]

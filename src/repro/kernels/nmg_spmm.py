@@ -25,14 +25,28 @@ TPU adaptation of the paper's AVX microkernel:
   maximizes row reuse between consecutive gathers, mirroring the paper's
   "save and initialize only one vector register".
 
-Grid: ``(R_pad/gr, N/TN, nchunks)`` with the chunk (K) dimension innermost so
-the output tile is revisited and accumulated in f32.
+Two schedules share the gather/matmul body:
+
+* ``stream=False`` — the original pipelined grid
+  ``(R_pad/gr, N/TN, nchunks)`` with the chunk (K) dimension innermost so
+  the output tile is revisited and accumulated in f32.
+* ``stream=True`` (default) — **double-buffered weight streaming** for the
+  prefill/large-M regime: grid ``(N/TN, R_pad/gr)`` with the full
+  ``(K_pad, TN)`` B column slab resident in VMEM across row groups, while
+  the compressed value tiles stay in HBM (``memory_space=ANY``) and are
+  DMA'd chunk-by-chunk through a 2-slot VMEM buffer inside the kernel
+  (async copy started for chunk k+1 while chunk k computes).  B — the
+  *large* operand at prefill shapes — is loaded once per column tile
+  instead of once per (row group × chunk) grid step, and weight fetch
+  overlaps the MXU.  Chunk accumulation order is identical to the grid
+  schedule, so the two produce bitwise-equal outputs (pinned by the
+  differential suite).
 
 VMEM working set per grid step (bf16, TN=256, gr=128, 2:4:16 => CG=96):
-  val tile   gr × CG×n × 2B          =  48 KiB
-  B tile     CG×m × TN × 2B          = 192 KiB
+  val tile   gr × CG×n × 2B (× 2 slots when streaming) =  48 KiB
+  B tile     CG×m × TN × 2B (full K slab when streaming)
   out tile   gr × TN × 4B            = 128 KiB
-comfortably inside the ~16 MiB v5e VMEM budget.
+comfortably inside the ~16 MiB v5e VMEM budget for transformer K extents.
 """
 
 from __future__ import annotations
@@ -76,13 +90,62 @@ def _kernel(idx_ref, val_ref, b_ref, o_ref, *, n, m, g, gr, CG, pats,
         )
 
 
+def _stream_kernel(idx_ref, val_hbm, b_ref, o_ref, scratch, sems, *, n, m, g,
+                   gr, CG, pats, nchunks, batch_positions):
+    """Weight-streaming schedule: value tiles DMA'd from HBM through a
+    2-slot double buffer while the full B column slab stays resident."""
+    gi = pl.program_id(1)
+
+    def chunk_dma(slot, ki):
+        return pltpu.make_async_copy(
+            val_hbm.at[pl.ds(gi * gr, gr), pl.ds(ki * CG, CG), :],
+            scratch.at[slot],
+            sems.at[slot],
+        )
+
+    chunk_dma(0, 0).start()  # warm-up: chunk 0 in flight before the loop
+    o_ref[...] = jnp.zeros_like(o_ref)
+
+    def body(ki, _):
+        slot = jax.lax.rem(ki, 2)
+
+        @pl.when(ki + 1 < nchunks)
+        def _prefetch():
+            chunk_dma(jax.lax.rem(ki + 1, 2), ki + 1).start()
+
+        chunk_dma(slot, ki).wait()
+        vals = scratch[slot].reshape(gr, CG * n)
+
+        # identical gather/accumulate order to the grid schedule => the two
+        # streams of f32 adds match bitwise
+        for start in range(0, CG, batch_positions):
+            stop = min(start + batch_positions, CG)
+            rows = []
+            for p in range(start, stop):  # static unroll; pattern p//g static
+                b_loc = idx_ref[0, ki, p]  # absolute m-block base: B holds K
+                mrows = b_ref[pl.ds(b_loc * m, m), :]
+                rows.extend(mrows[l : l + 1, :] for l in pats[p // g])
+            gathered = jnp.concatenate(rows, axis=0)
+            o_ref[...] += jnp.dot(
+                vals[:, start * n : stop * n],
+                gathered.astype(vals.dtype),
+                preferred_element_type=jnp.float32,
+            )
+        return 0
+
+    jax.lax.fori_loop(0, nchunks, body, 0)
+
+
 @functools.partial(
-    jax.jit, static_argnames=("tn", "interpret", "target_depth")
+    jax.jit, static_argnames=("tn", "interpret", "target_depth", "stream")
 )
 def nmg_spmm_pallas(a: GroupedNMTensor, b: jnp.ndarray, *, tn: int = 128,
-                    interpret: bool = True, target_depth: int = 128
-                    ) -> jnp.ndarray:
-    """C = A_canonical @ B via the Pallas kernel.  Returns f32 [R, N]."""
+                    interpret: bool = True, target_depth: int = 128,
+                    stream: bool = True) -> jnp.ndarray:
+    """C = A_canonical @ B via the Pallas kernel.  Returns f32 [R, N].
+
+    ``stream`` picks the schedule: double-buffered weight streaming
+    (default, the prefill path) or the original pipelined grid."""
     n, m, g, gr = a.n, a.m, a.g, a.gr
     C = math.comb(m, n)
     CG = C * g
@@ -99,24 +162,46 @@ def nmg_spmm_pallas(a: GroupedNMTensor, b: jnp.ndarray, *, tn: int = 128,
     N_pad = b_p.shape[1]
 
     batch_positions = max(1, target_depth // n)
-    grid = (Gr, N_pad // tn, nchunks)
 
-    out = pl.pallas_call(
-        functools.partial(
-            _kernel, n=n, m=m, g=g, gr=gr, CG=CG, pats=pats,
-            batch_positions=batch_positions,
-        ),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, CG), lambda gi, ni, ki: (gi, ki, 0),
-                         memory_space=pltpu.SMEM),
-            pl.BlockSpec((gr, CG, n), lambda gi, ni, ki: (gi, ki, 0)),
-            pl.BlockSpec((CG * m, tn), lambda gi, ni, ki: (ki, ni)),
-        ],
-        out_specs=pl.BlockSpec((gr, tn), lambda gi, ni, ki: (gi, ni)),
-        out_shape=jax.ShapeDtypeStruct((R_pad, N_pad), jnp.float32),
-        interpret=interpret,
-    )(blk_idx, val, b_p)
+    if stream:
+        grid = (N_pad // tn, Gr)
+        out = pl.pallas_call(
+            functools.partial(
+                _stream_kernel, n=n, m=m, g=g, gr=gr, CG=CG, pats=pats,
+                nchunks=nchunks, batch_positions=batch_positions,
+            ),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, nchunks, CG), lambda ni, gi: (gi, 0, 0),
+                             memory_space=pltpu.SMEM),
+                pl.BlockSpec(memory_space=pltpu.ANY),  # val stays in HBM
+                # B slab constant in gi: resident across the row-group loop
+                pl.BlockSpec((K_pad, tn), lambda ni, gi: (0, ni)),
+            ],
+            out_specs=pl.BlockSpec((gr, tn), lambda ni, gi: (gi, ni)),
+            out_shape=jax.ShapeDtypeStruct((R_pad, N_pad), jnp.float32),
+            scratch_shapes=[pltpu.VMEM((2, gr, CG, n), val.dtype),
+                            pltpu.SemaphoreType.DMA((2,))],
+            interpret=interpret,
+        )(blk_idx, val, b_p)
+    else:
+        grid = (Gr, N_pad // tn, nchunks)
+        out = pl.pallas_call(
+            functools.partial(
+                _kernel, n=n, m=m, g=g, gr=gr, CG=CG, pats=pats,
+                batch_positions=batch_positions,
+            ),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, CG), lambda gi, ni, ki: (gi, ki, 0),
+                             memory_space=pltpu.SMEM),
+                pl.BlockSpec((gr, CG, n), lambda gi, ni, ki: (gi, ki, 0)),
+                pl.BlockSpec((CG * m, tn), lambda gi, ni, ki: (ki, ni)),
+            ],
+            out_specs=pl.BlockSpec((gr, tn), lambda gi, ni, ki: (gi, ni)),
+            out_shape=jax.ShapeDtypeStruct((R_pad, N_pad), jnp.float32),
+            interpret=interpret,
+        )(blk_idx, val, b_p)
 
     # crop row padding (canonical row count) and column padding
     sd = a.sparse_dim % 2

@@ -47,6 +47,14 @@ from repro.kernels import ref as kref
 from repro.tune import routing
 from repro.kernels.fused_sparse_matmul import matmul_threshold_pallas
 from repro.kernels.nm_mask import nm_mask_pallas
+from repro.kernels.nmg_fused import (
+    act_fn,
+    fusable_ffn,
+    fusable_qkv,
+    fused_segments,
+    nmg_ffn_pallas,
+    nmg_qkv_pallas,
+)
 from repro.kernels.nmg_gemv import nmg_gemv_pallas
 from repro.kernels.nmg_spmm import nmg_spmm_pallas
 
@@ -59,6 +67,12 @@ __all__ = [
     "nmg_gemv",
     "nmg_gemv_xla",
     "nmg_linear",
+    "nmg_qkv",
+    "nmg_qkv_xla",
+    "nmg_ffn",
+    "nmg_ffn_xla",
+    "maybe_fused_qkv",
+    "maybe_fused_ffn",
     "nm_mask",
     "matmul_threshold",
     "kernel_counters",
@@ -110,7 +124,12 @@ def nmg_spmm(a: GroupedNMTensor, b: jnp.ndarray, *, use_pallas: bool | None = No
         use_pallas = on_tpu()
     _KERNEL_COUNTS[("nmg_spmm", "pallas" if use_pallas else "xla")] += 1
     if use_pallas:
-        return nmg_spmm_pallas(a, b, interpret=not on_tpu())
+        cfg, src = routing.spmm_pallas_config(**_route_ctx(a, b.dtype))
+        sched = "stream" if cfg["stream"] else "grid"
+        _KERNEL_COUNTS[("nmg_spmm_pallas", f"{sched}[{src}]")] += 1
+        return nmg_spmm_pallas(a, b, interpret=not on_tpu(), tn=cfg["tn"],
+                               target_depth=cfg["target_depth"],
+                               stream=cfg["stream"])
     return nmg_spmm_xla(a, b)
 
 
@@ -238,6 +257,159 @@ def nmg_gemv_xla(a: GroupedNMTensor, b: jnp.ndarray, *, out_dtype=None,
     if out_dtype is not None:
         out = out.astype(out_dtype)
     return out
+
+
+# ---------------------------------------------------------------------------
+# decode megakernels: fused QKV and fused gated-FFN
+# ---------------------------------------------------------------------------
+
+
+def _fused_ctx(ws, dtype) -> dict:
+    """Routing context of a fused projection group: shared contraction
+    extent, *summed* output rows."""
+    w0 = ws[0]
+    sd = w0.sparse_dim % 2
+    return dict(K=w0.dense_shape[sd],
+                R=sum(w.dense_shape[1 - (w.sparse_dim % 2)] for w in ws),
+                fmt=(w0.n, w0.m, w0.g), gr=w0.gr, dtype=dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "transpose_out"))
+def nmg_qkv_xla(ws, b: jnp.ndarray, *, out_dtype=None,
+                transpose_out: bool = False) -> tuple:
+    """XLA fused QKV: the per-projection gather-einsum over the
+    row-concatenated plan — one take + one einsum for the whole group.
+    Each group's contraction is independent and ordered exactly as in
+    :func:`nmg_gemv_xla`, so the per-projection slices match the
+    sequential path bitwise."""
+    w0 = ws[0]
+    gr = w0.gr
+    val = jnp.concatenate([w.val for w in ws], axis=0)
+    cols = jnp.concatenate([w.gather_plan().cols for w in ws], axis=0)
+    R_pad, nblocks, n = val.shape
+    Gr = cols.shape[0]
+    K_pad = nblocks * w0.m
+    K, M = b.shape
+    b_p = jnp.pad(b, ((0, K_pad - K), (0, 0)))
+
+    xg = jnp.take(b_p, cols.reshape(-1), axis=0)
+    xg = xg.reshape(Gr, nblocks * n, M)
+    val_g = val.reshape(Gr, gr, nblocks * n)
+    spec = "grk,gkm->mgr" if transpose_out else "grk,gkm->grm"
+    out = jnp.einsum(spec, val_g.astype(jnp.float32), xg.astype(jnp.float32))
+    out = out.reshape(M, R_pad) if transpose_out else out.reshape(R_pad, M)
+    if out_dtype is not None:
+        out = out.astype(out_dtype)
+    segs = fused_segments(ws)
+    if transpose_out:
+        return tuple(out[:, off:off + R] for off, R in segs)
+    return tuple(out[off:off + R] for off, R in segs)
+
+
+def nmg_qkv(ws, b: jnp.ndarray, *, out_dtype=None,
+            transpose_out: bool = False,
+            use_pallas: bool | None = None) -> tuple:
+    """Fused projection group: every weight of ``ws`` against the same
+    decode-shaped B[K, M] in **one** launch.  Returns one [R_i, M] array
+    (or [M, R_i] with ``transpose_out``) per projection."""
+    if use_pallas is None:
+        use_pallas = on_tpu()
+    _KERNEL_COUNTS[("nmg_qkv", "pallas" if use_pallas else "xla")] += 1
+    if use_pallas:
+        cfg, _ = routing.gemv_pallas_config(**_fused_ctx(ws, b.dtype))
+        outs = nmg_qkv_pallas(tuple(ws), b, out_dtype=out_dtype,
+                              interpret=not on_tpu(), tm=cfg["tm"],
+                              target_depth=cfg["target_depth"])
+        return tuple(o.T for o in outs) if transpose_out else outs
+    return nmg_qkv_xla(tuple(ws), b, out_dtype=out_dtype,
+                       transpose_out=transpose_out)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("act", "out_dtype", "transpose_out")
+)
+def nmg_ffn_xla(w: GroupedNMTensor, b: jnp.ndarray, *, act: str = "silu",
+                out_dtype=None, transpose_out: bool = False) -> jnp.ndarray:
+    """XLA fused gated FFN: literally the sequential ops (projection with
+    the decode epilogue, split, act, multiply) under one jit — bitwise
+    equal to the unfused model path by construction."""
+    hh = nmg_gemv_xla(w, b, out_dtype=out_dtype, transpose_out=True)
+    u, v = jnp.split(hh, 2, axis=-1)
+    out = act_fn(act)(u) * v                   # [M, F]
+    return out if transpose_out else out.T
+
+
+def nmg_ffn(w: GroupedNMTensor, b: jnp.ndarray, *, act: str = "silu",
+            out_dtype=None, transpose_out: bool = False,
+            use_pallas: bool | None = None) -> jnp.ndarray:
+    """Fused gated-MLP pair: packed [D, 2F] weight against decode-shaped
+    B[D, M], gate applied in the kernel epilogue.  Returns [F, M] (or
+    [M, F] with ``transpose_out``)."""
+    if use_pallas is None:
+        use_pallas = on_tpu()
+    _KERNEL_COUNTS[("nmg_ffn", "pallas" if use_pallas else "xla")] += 1
+    if use_pallas:
+        cfg, _ = routing.gemv_pallas_config(**_route_ctx(w, b.dtype))
+        out = nmg_ffn_pallas(w, b, act=act, out_dtype=out_dtype,
+                             interpret=not on_tpu(), tm=cfg["tm"],
+                             target_depth=cfg["target_depth"])
+        return out.T if transpose_out else out
+    return nmg_ffn_xla(w, b, act=act, out_dtype=out_dtype,
+                       transpose_out=transpose_out)
+
+
+def maybe_fused_qkv(x: jnp.ndarray, ws, *, use_pallas: bool | None = None):
+    """Linear-level fused-QKV router: y_i = x @ W_i for every projection in
+    one launch, or None when the group is ineligible (mixed formats, dense
+    weights, prefill-shaped x) or the table vetoes fusion — callers fall
+    back to per-projection ``nmg_linear``.  Outputs are in x.dtype and
+    bitwise-equal to the sequential path either way."""
+    ws = tuple(ws)
+    if not fusable_qkv(ws):
+        return None
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    M = x2.shape[0]
+    ctx = _fused_ctx(ws, x.dtype)
+    thr, _ = routing.decode_m_max(**ctx)
+    if M > thr:
+        return None                            # prefill regime: spmm wins
+    fuse, src = routing.fused_qkv(**ctx)
+    if not fuse:
+        _KERNEL_COUNTS[("nmg_qkv", f"sequential[{src}]")] += 1
+        return None
+    _KERNEL_COUNTS[("nmg_qkv", f"fused[{src}]")] += 1
+    ys = nmg_qkv(ws, x2.T, out_dtype=x.dtype, transpose_out=True,
+                 use_pallas=use_pallas)
+    return tuple(y.reshape(*lead, -1) for y in ys)
+
+
+def maybe_fused_ffn(x: jnp.ndarray, w, *, act: str = "silu",
+                    use_pallas: bool | None = None):
+    """Linear-level fused-FFN router: ``act(u) * v`` for the packed gated
+    weight in one launch, or None (ineligible shape/format or table veto)
+    so the caller runs the sequential projection + split + gate."""
+    if not isinstance(w, GroupedNMTensor):
+        return None
+    sd = w.sparse_dim % 2
+    R = w.dense_shape[1 - sd]
+    if R % 2 or not fusable_ffn(w, R // 2):
+        return None
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    M = x2.shape[0]
+    ctx = _route_ctx(w, x.dtype)
+    thr, _ = routing.decode_m_max(**ctx)
+    if M > thr:
+        return None
+    fuse, src = routing.fused_ffn(**ctx)
+    if not fuse:
+        _KERNEL_COUNTS[("nmg_ffn", f"sequential[{src}]")] += 1
+        return None
+    _KERNEL_COUNTS[("nmg_ffn", f"fused[{src}]")] += 1
+    y = nmg_ffn(w, x2.T, act=act, out_dtype=x.dtype, transpose_out=True,
+                use_pallas=use_pallas)
+    return y.reshape(*lead, -1)
 
 
 # ---------------------------------------------------------------------------

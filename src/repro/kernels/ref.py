@@ -5,12 +5,16 @@ Each kernel's tests sweep shapes/dtypes and assert_allclose against these.
 
 from __future__ import annotations
 
+import functools
+
+import jax
 import jax.numpy as jnp
 
 from repro.core import nmg
 from repro.core.layouts import GroupedNMTensor
 
-__all__ = ["nmg_spmm_ref", "nm_mask_ref", "matmul_threshold_ref"]
+__all__ = ["nmg_spmm_ref", "nmg_qkv_ref", "nmg_ffn_ref", "nm_mask_ref",
+           "matmul_threshold_ref"]
 
 
 def nmg_spmm_ref(a: GroupedNMTensor, b: jnp.ndarray) -> jnp.ndarray:
@@ -20,6 +24,27 @@ def nmg_spmm_ref(a: GroupedNMTensor, b: jnp.ndarray) -> jnp.ndarray:
     if a.sparse_dim % 2 == 0:  # canonical view is the transpose
         dense = dense.T
     return jnp.dot(dense.astype(jnp.float32), b.astype(jnp.float32))
+
+
+def nmg_qkv_ref(ws, b: jnp.ndarray) -> tuple:
+    """Fused-QKV oracle: nothing but one :func:`nmg_spmm_ref` per
+    projection — the megakernel tests diff the single-launch kernels
+    against this trivially-auditable composition."""
+    return tuple(nmg_spmm_ref(w, b) for w in ws)
+
+
+def nmg_ffn_ref(w: GroupedNMTensor, b: jnp.ndarray, *, act: str = "silu"
+                ) -> jnp.ndarray:
+    """Fused gated-FFN oracle: project the packed [D, 2F] weight with
+    :func:`nmg_spmm_ref`, split into the u/gate halves along the output
+    rows, apply the activation, multiply.  [F, M] f32."""
+    hh = nmg_spmm_ref(w, b)                    # [2F, M]
+    u, v = jnp.split(hh, 2, axis=0)
+    if act == "silu":
+        f = jax.nn.silu
+    else:
+        f = functools.partial(jax.nn.gelu, approximate=True)
+    return f(u) * v
 
 
 def nm_mask_ref(x: jnp.ndarray, n: int, m: int) -> jnp.ndarray:

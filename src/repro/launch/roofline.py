@@ -2,7 +2,14 @@
 per-(arch x shape x mesh) three-term roofline analysis (assignment
 §ROOFLINE ANALYSIS) as markdown for EXPERIMENTS.md.
 
+With ``--bench BENCH_bench.json`` it also emits the **kernel roofline**
+section: every benchmark record carrying a ``roofline_ideal_us`` (the
+fig6 megakernel series) as measured-vs-ideal distance, so the decode
+megakernel's gap to the HW roofline lands in the same report as the
+end-to-end terms.
+
     python -m repro.launch.roofline [--dir experiments/dryrun] [--mesh 16x16]
+                                    [--bench BENCH_bench.json]
 """
 
 from __future__ import annotations
@@ -80,17 +87,50 @@ def table(recs, *, full: bool = True) -> str:
     return "\n".join(lines)
 
 
+def kernel_table(bench_path: str) -> str:
+    """Markdown kernel-roofline section from a ``BENCH_bench.json``:
+    one row per record that carries a modelled ``roofline_ideal_us``
+    (fig6's megakernel series).  Distance is measured/ideal — honest only
+    when the benchmark ran on the chip ``HW`` describes; elsewhere the
+    speedup column is the meaningful one."""
+    doc = json.loads(pathlib.Path(bench_path).read_text())
+    rows = [r for r in doc.get("results", [])
+            if isinstance(r, dict) and "roofline_ideal_us" in r]
+    if not rows:
+        return f"(no kernel-roofline records in {bench_path})"
+    lines = [
+        "| kernel | us/call | sequential us | speedup | ideal us |"
+        " distance |",
+        "|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        lines.append(
+            f"| {r['name']} | {r['us_per_call']:.1f} "
+            f"| {r.get('sequential_us', 0.0):.1f} "
+            f"| {r.get('speedup_vs_sequential', 0.0):.2f}x "
+            f"| {r['roofline_ideal_us']:.2f} "
+            f"| {r['us_per_call'] / r['roofline_ideal_us']:.1f}x |"
+        )
+    return "\n".join(lines)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="experiments/dryrun")
     ap.add_argument("--mesh", default=None)
     ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--bench", default=None,
+                    help="BENCH_bench.json to render the kernel-roofline "
+                         "section from (fig6 megakernel records)")
     args = ap.parse_args()
     recs = load(args.dir, args.mesh, args.tag)
     print(f"hardware: {HW['peak_flops_bf16']/1e12:.0f} TF/s bf16, "
           f"{HW['hbm_bw']/1e9:.0f} GB/s HBM, {HW['ici_bw']/1e9:.0f} GB/s ICI"
           " per chip\n")
     print(table(recs))
+    if args.bench:
+        print("\n### kernel roofline (decode megakernels)\n")
+        print(kernel_table(args.bench))
 
 
 if __name__ == "__main__":

@@ -16,7 +16,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import MLAConfig, ModelConfig, dense_init, mm
+from repro.models.common import (MLAConfig, ModelConfig, dense_init, mm,
+                                 mm_fused_qkv)
 
 __all__ = [
     "rope",
@@ -232,9 +233,10 @@ def init_gqa(key, cfg: ModelConfig):
 def _qkv(p, x, cfg: ModelConfig, positions):
     B, S, D = x.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
-    q = mm(x, p["wq"])
-    k = mm(x, p["wk"])
-    v = mm(x, p["wv"])
+    # one megakernel launch for all three projections when the weights are
+    # grouped n:m:g and x is decode-shaped; bitwise-equal mm() fallback
+    # otherwise
+    q, k, v = mm_fused_qkv(x, p["wq"], p["wk"], p["wv"])
     if cfg.qkv_bias:
         q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
     q = q.reshape(B, S, H, hd)

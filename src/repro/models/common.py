@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["MoEConfig", "MLAConfig", "SSMConfig", "ModelConfig", "dense_init",
-           "mm"]
+           "mm", "mm_fused_qkv", "mm_gated"]
 
 
 def mm(x, w, *, inline=None):
@@ -61,6 +61,46 @@ def mm(x, w, *, inline=None):
     if y.dtype != out_dtype:
         y = y.astype(out_dtype)
     return y.reshape(*lead, -1)
+
+
+def mm_fused_qkv(x, wq, wk, wv):
+    """The attention projections, through the decode megakernel when
+    eligible: one weight-stationary launch computes q/k/v, gathering each
+    fiber group's activations once per token instead of once per
+    projection.  Ineligible groups (dense weights, mixed formats,
+    prefill-shaped x, table veto) fall back to three :func:`mm` calls;
+    outputs are bitwise-equal either way, so this is purely a launch-count
+    optimization."""
+    from repro.kernels import ops as kops
+
+    ys = kops.maybe_fused_qkv(x, (wq, wk, wv))
+    ws = (wq, wk, wv)
+    if ys is None:
+        return tuple(mm(x, w) for w in ws)
+    # the fused route emits x.dtype (like the per-projection decode
+    # kernel); apply mm()'s promotion semantics on top so fusing never
+    # changes a layer's output dtype
+    outs = []
+    for y, w in zip(ys, ws):
+        out_dtype = jnp.result_type(x.dtype, w.dtype)
+        outs.append(y.astype(out_dtype) if y.dtype != out_dtype else y)
+    return tuple(outs)
+
+
+def mm_gated(x, w, act: str, *, inline=None):
+    """The gated-MLP pair (packed [D, 2F] weight) with the activation fused
+    into the projection's kernel epilogue, or **None** when the megakernel
+    route is ineligible — the caller then runs the sequential
+    projection/split/activation path.  Only fires when no promotion cast
+    would sit between projection and gate (promotion would change where the
+    activation's rounding happens, breaking fused ≡ sequential bitwise)."""
+    if inline is not None:
+        return None
+    if jnp.result_type(x.dtype, getattr(w, "dtype", x.dtype)) != x.dtype:
+        return None
+    from repro.kernels import ops as kops
+
+    return kops.maybe_fused_ffn(x, w, act=act)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -56,6 +56,7 @@ __all__ = [
 
 
 from repro.models.common import mm as _mm  # sparse-aware weight apply
+from repro.models.common import mm_gated
 
 
 def _rms(x, w, eps: float = 1e-6):
@@ -218,11 +219,17 @@ def _sublayer_ffn(lp, x, cfg):
         if cfg.mlp_inline_threshold is not None:
             from repro.core.sparsifiers import ScalarThresholdSparsifier
             inline = ScalarThresholdSparsifier(cfg.mlp_inline_threshold)
-        hh = _mm(h, lp["mlp"]["wi"], inline=inline)
         if cfg.gated_mlp:
-            u, v = jnp.split(hh, 2, axis=-1)
-            hh = _act(cfg.act)(u) * v
+            # fused gated megakernel: projection + split + act + gate in
+            # one decode launch when eligible; None -> sequential path
+            # (bitwise-equal — the kernel epilogue replays these exact ops)
+            hh = mm_gated(h, lp["mlp"]["wi"], cfg.act, inline=inline)
+            if hh is None:
+                hh = _mm(h, lp["mlp"]["wi"], inline=inline)
+                u, v = jnp.split(hh, 2, axis=-1)
+                hh = _act(cfg.act)(u) * v
         else:
+            hh = _mm(h, lp["mlp"]["wi"], inline=inline)
             hh = _act(cfg.act)(hh)
         hh = tag("mlp.act", hh)
         f = _mm(hh, lp["mlp"]["wo"])

@@ -152,7 +152,7 @@ def _jit_paged_decode_chunk(cfg: ModelConfig, page_size: int,
 
 
 def sparsify_for_serving(params, n: int = 1, m: int = 4, g: int = 16,
-                         gr: int = 64):
+                         gr: int = 64, *, attn: bool = False):
     """Convert FFN weights to the n:m:g inference layout (paper §5.3:
     'our sparse-dense GEMM kernel during inference').
 
@@ -162,11 +162,21 @@ def sparsify_for_serving(params, n: int = 1, m: int = 4, g: int = 16,
     gathers across the shared rows and contract them as one dense tile,
     which is what makes the sparse path *faster* than dense rather than
     gather-bound (gr=1, the paper's per-fiber CPU format, keeps maximal
-    energy but pays one gather per stored value per call)."""
+    energy but pays one gather per stored value per call).
+
+    ``attn=True`` additionally sparsifies the attention projections
+    (wq/wk/wv/wo).  q/k/v then share one format over the same contraction
+    axis, so the decode step routes them through the fused QKV megakernel
+    (one launch per step instead of three — ``kernels/nmg_fused.py``);
+    the packed gated-MLP ``wi`` likewise takes the fused projection+gate
+    launch."""
     sb = SparsityBuilder()
     sp = GroupedNMSparsifier(n, m, g, gr, sparse_dim=0)  # [K, N] weights
     sb.set_weight("*mlp.wi", sp, GroupedNMTensor)
     sb.set_weight("*mlp.wo", sp, GroupedNMTensor)
+    if attn:
+        for name in ("*attn.wq", "*attn.wk", "*attn.wv", "*attn.wo"):
+            sb.set_weight(name, sp, GroupedNMTensor)
     return sb.sparsify_params(params)
 
 

@@ -10,8 +10,11 @@ its section of the JSON tuning table:
 * the XLA spmm gathered-block cap (``spmm_block_elems``),
 * lossless layout-conversion costs (``convert_cost/...``) for the
   dispatcher tie-breaker,
+* the fused-QKV megakernel vs per-projection decision (``fused_qkv``)
+  at the fig11 serving shapes,
 * on TPU (or with ``--pallas`` anywhere): the Pallas gemv tile config
-  sweep (``gemv_pallas/...``).
+  sweep (``gemv_pallas/...``) and the Pallas spmm schedule sweep
+  (``spmm_pallas/...`` — streamed double-buffer vs pipelined grid).
 
 ``--quick`` shrinks the grid to a CI-sized smoke (a handful of shapes,
 few repetitions); the resulting table is still a *valid* table — just a
@@ -99,11 +102,20 @@ def main(argv=None) -> int:
         for k, us in bench.tune_conversion_costs(table, reps=reps).items():
             print(f"convert_cost,{k},{us:.1f}")
 
+    # fused-QKV decision at the fig11 serving shapes: the fused route is
+    # the shipped default, so this either confirms it or writes a veto
+    win = bench.tune_fused_qkv(table, reps=reps)
+    print(f"fused_qkv,fig11-shapes,{win}")
+
     if kops.on_tpu() or args.pallas:
         cfg = bench.tune_gemv_pallas(table, reps=max(1, reps // 2))
         print(f"gemv_pallas,best,{json.dumps(cfg)}")
+        scfg = bench.tune_spmm_pallas(table, reps=max(1, reps // 2))
+        print(f"spmm_pallas,best,{json.dumps(scfg)}")
     else:
         print("gemv_pallas,skipped,(off-TPU; pass --pallas to sweep in "
+              "interpret mode)")
+        print("spmm_pallas,skipped,(off-TPU; pass --pallas to sweep in "
               "interpret mode)")
 
     table.meta.update({

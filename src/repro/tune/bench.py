@@ -30,6 +30,8 @@ __all__ = [
     "tune_decode_threshold",
     "tune_spmm_block",
     "tune_gemv_pallas",
+    "tune_spmm_pallas",
+    "tune_fused_qkv",
     "tune_conversion_costs",
     "autotune_for_serving",
 ]
@@ -227,6 +229,90 @@ def tune_gemv_pallas(table: TuningTable, *, K: int = 1024, R: int = 1024,
     table.put(shape_key("gemv_pallas", K=K, R=R, fmt=fmt, gr=gr,
                         dtype=dtype), best)
     return best
+
+
+def tune_spmm_pallas(table: TuningTable, *, K: int = 1024, R: int = 1024,
+                     N: int = 256, fmt: tuple = (1, 4, 8), gr: int = 64,
+                     dtype=jnp.float32,
+                     tns: Sequence[int] = (128,),
+                     depths: Sequence[int] = (128,),
+                     reps: int = 3, interpret: Optional[bool] = None) -> dict:
+    """Sweep the Pallas spmm schedule (streamed double-buffer vs pipelined
+    grid) and tile config, recording the fastest as the shape bucket's
+    ``spmm_pallas`` entry.  Interpret-mode timings off-TPU are smoke only
+    (the CLI gates this behind ``--pallas`` there)."""
+    from repro.kernels import ops as kops
+    from repro.kernels.nmg_spmm import nmg_spmm_pallas
+
+    if interpret is None:
+        interpret = not kops.on_tpu()
+    key = jax.random.PRNGKey(5)
+    t = _probe_tensor(key, K, R, fmt, gr)
+    b = jax.random.normal(jax.random.fold_in(key, 1), (K, N), jnp.float32
+                          ).astype(dtype)
+    best, best_us = None, float("inf")
+    for stream in (True, False):
+        for tn in tns:
+            for depth in depths:
+                fn = jax.jit(lambda a, bb, tn=tn, d=depth, s=stream:
+                             nmg_spmm_pallas(a, bb, tn=tn, target_depth=d,
+                                             stream=s, interpret=interpret))
+                us = time_us(fn, t, b, reps=reps,
+                             inner=1 if interpret else 5)
+                if us < best_us:
+                    best = {"tn": int(tn), "target_depth": int(depth),
+                            "stream": bool(stream)}
+                    best_us = us
+    table.put(shape_key("spmm_pallas", K=K, R=R, fmt=fmt, gr=gr,
+                        dtype=dtype), best)
+    return best
+
+
+def tune_fused_qkv(table: TuningTable, *, K: int = 256,
+                   Rs: Sequence[int] = (256, 256, 256),
+                   fmt: tuple = (1, 4, 8), gr: int = 64, M: int = 4,
+                   dtype=jnp.float32, reps: int = 3,
+                   use_pallas: Optional[bool] = None) -> bool:
+    """Measure the fused-QKV megakernel against the per-projection gemv
+    path at a decode width and record the winner as the bucket's
+    ``fused_qkv`` bool (the summed output rows key the bucket, matching
+    the router's fused-group context).  Fusion should win wherever the
+    per-launch gather overhead dominates; a bucket where it does not gets
+    an explicit veto instead of a silent slowdown."""
+    from repro.kernels import ops as kops
+
+    if use_pallas is None:
+        use_pallas = kops.on_tpu()
+    key = jax.random.PRNGKey(6)
+    ws = tuple(_probe_tensor(jax.random.fold_in(key, i), K, R, fmt, gr,
+                             dtype=dtype)
+               for i, R in enumerate(Rs))
+    b = jax.random.normal(jax.random.fold_in(key, 9), (K, M), jnp.float32
+                          ).astype(dtype)
+    # weights are closed over, as in the engine's jitted decode step —
+    # only the activation is a per-call argument on either path
+    fused_fn = jax.jit(lambda bb: kops.nmg_qkv(ws, bb, out_dtype=dtype,
+                                               use_pallas=use_pallas))
+    # per-launch sequential baseline (one dispatch per projection) — the
+    # structure the megakernel collapses, same framing as fig6's series
+    launches = tuple(
+        jax.jit(lambda bb, w=w: kops.nmg_gemv(w, bb, out_dtype=dtype,
+                                              use_pallas=use_pallas))
+        for w in ws)
+
+    def seq_fn(bb):
+        return tuple(f(bb) for f in launches)
+    inner = 1 if (use_pallas and not kops.on_tpu()) else 20
+    # interleaved best-of rounds: the decision hinges on tens-of-us launch
+    # overhead, and a contended runner inflates the two paths asymmetrically
+    fused_us = min(time_us(fused_fn, b, reps=reps, inner=inner)
+                   for _ in range(3))
+    seq_us = min(time_us(seq_fn, b, reps=reps, inner=inner)
+                 for _ in range(3))
+    win = bool(fused_us <= seq_us)
+    table.put(shape_key("fused_qkv", K=K, R=sum(int(r) for r in Rs), fmt=fmt,
+                        gr=gr, dtype=dtype), win)
+    return win
 
 
 def tune_conversion_costs(table: TuningTable, *, side: int = 256,

@@ -11,6 +11,12 @@ answers every routing question the kernels ask:
   block,
 * :func:`gemv_pallas_config` — the Pallas gemv output-tile / contraction
   depth,
+* :func:`spmm_pallas_config` — the Pallas spmm column tile / contraction
+  depth and whether the streamed (double-buffered weight DMA) schedule is
+  used,
+* :func:`fused_qkv` / :func:`fused_ffn` — whether the decode megakernels
+  (``kernels/nmg_fused.py``) fuse eligible projection groups into one
+  launch or fall back to per-projection gemv,
 * :func:`conversion_cost` — measured lossless-conversion costs the
   dispatcher's tie-breaker consults (``core/dispatch.py``).
 
@@ -39,6 +45,9 @@ __all__ = [
     "DEFAULT_DECODE_M_MAX",
     "DEFAULT_SPMM_BLOCK_ELEMS",
     "DEFAULT_GEMV_PALLAS",
+    "DEFAULT_SPMM_PALLAS",
+    "DEFAULT_FUSED_QKV",
+    "DEFAULT_FUSED_FFN",
     "ENV_TABLE",
     "active_table",
     "set_active_table",
@@ -48,6 +57,9 @@ __all__ = [
     "decode_m_max",
     "spmm_block_elems",
     "gemv_pallas_config",
+    "spmm_pallas_config",
+    "fused_qkv",
+    "fused_ffn",
     "conversion_cost",
 ]
 
@@ -62,6 +74,15 @@ DEFAULT_SPMM_BLOCK_ELEMS = 1 << 22
 #: default Pallas gemv tile config (lane-width output tile, ~128-deep
 #: packed contractions)
 DEFAULT_GEMV_PALLAS = {"tm": 128, "target_depth": 128}
+
+#: default Pallas spmm config: lane-width column tile, ~128-deep packed
+#: contractions, and the double-buffered weight-streaming schedule
+DEFAULT_SPMM_PALLAS = {"tn": 128, "target_depth": 128, "stream": True}
+
+#: decode megakernels fuse by default — eligibility (matching formats,
+#: decode-shaped M) is the kernels' business; the table can veto per bucket
+DEFAULT_FUSED_QKV = True
+DEFAULT_FUSED_FFN = True
 
 #: environment variable naming a table file to auto-load (opt-in; read by
 #: :func:`load_table_cli`, which the CLI entry points call)
@@ -183,6 +204,49 @@ def gemv_pallas_config(*, K: int, R: int, fmt: tuple, gr: int, dtype
     cfg = dict(DEFAULT_GEMV_PALLAS)
     cfg.update(val)
     return cfg, src
+
+
+def spmm_pallas_config(*, K: int, R: int, fmt: tuple, gr: int, dtype
+                       ) -> tuple[dict, str]:
+    """Pallas spmm config {tn, target_depth, stream} for this shape bucket.
+    Exact-bucket hit, else the device-wide ``spmm_pallas`` override, else
+    the shipped default (streamed schedule)."""
+    val, src = _lookup(
+        shape_key("spmm_pallas", K=K, R=R, fmt=fmt, gr=gr, dtype=dtype),
+        None,
+    )
+    if val is None:
+        val, src = _lookup("spmm_pallas", DEFAULT_SPMM_PALLAS)
+    cfg = dict(DEFAULT_SPMM_PALLAS)
+    cfg.update(val)
+    return cfg, src
+
+
+def fused_qkv(*, K: int, R: int, fmt: tuple, gr: int, dtype
+              ) -> tuple[bool, str]:
+    """Whether eligible attention projections fuse into the single-launch
+    QKV megakernel for this shape bucket (``R`` is the *summed* output
+    rows of the fused group).  Bucket hit, else device-wide, else True."""
+    val, src = _lookup(
+        shape_key("fused_qkv", K=K, R=R, fmt=fmt, gr=gr, dtype=dtype),
+        None,
+    )
+    if val is None:
+        val, src = _lookup("fused_qkv", DEFAULT_FUSED_QKV)
+    return bool(val), src
+
+
+def fused_ffn(*, K: int, R: int, fmt: tuple, gr: int, dtype
+              ) -> tuple[bool, str]:
+    """Whether an eligible packed gated-MLP weight routes to the fused
+    projection+gate megakernel for this shape bucket."""
+    val, src = _lookup(
+        shape_key("fused_ffn", K=K, R=R, fmt=fmt, gr=gr, dtype=dtype),
+        None,
+    )
+    if val is None:
+        val, src = _lookup("fused_ffn", DEFAULT_FUSED_FFN)
+    return bool(val), src
 
 
 def conversion_cost(src_cls: type, dst_cls: type) -> Optional[float]:

@@ -51,6 +51,7 @@ TOL = {jnp.dtype(jnp.float32): 1e-4, jnp.dtype(jnp.bfloat16): 5e-2}
 
 @pytest.mark.parametrize("fmt", FORMATS,
                          ids=lambda f: "{}:{}:{}gr{}".format(*f))
+@pytest.mark.pallas_interpret
 @pytest.mark.parametrize("shape", SHAPES, ids=lambda s: "x".join(map(str, s)))
 def test_nmg_spmm_grid_vs_ref(fmt, shape):
     n, m, g, gr = fmt
@@ -65,6 +66,7 @@ def test_nmg_spmm_grid_vs_ref(fmt, shape):
                                rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.pallas_interpret
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_nmg_spmm_output_dtype_regression(dtype):
     """Contract: the kernel accumulates and returns f32 for every input
@@ -82,6 +84,7 @@ def test_nmg_spmm_output_dtype_regression(dtype):
                                rtol=tol, atol=tol)
 
 
+@pytest.mark.pallas_interpret
 def test_nmg_spmm_golden_exact():
     """Golden case in exact f32 arithmetic: a matrix that is already
     2:4-sparse with small-integer values, multiplied by an identity-padded
@@ -136,6 +139,7 @@ def test_nmg_gemv_matches_spmm_and_oracle(fmt, M):
 
 @pytest.mark.parametrize("fmt", [(1, 4, 4, 2), (2, 4, 2, 4)],
                          ids=lambda f: "{}:{}:{}gr{}".format(*f))
+@pytest.mark.pallas_interpret
 def test_nmg_gemv_pallas_interpret_matches_oracle(fmt):
     n, m, g, gr = fmt
     x = jax.random.normal(KEY, (8, 96))
@@ -147,6 +151,7 @@ def test_nmg_gemv_pallas_interpret_matches_oracle(fmt):
                                rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.pallas_interpret
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_nmg_gemv_dtype_preserving_epilogue(dtype):
     """Contract: accumulation is f32, but the epilogue emits the requested
@@ -243,6 +248,7 @@ def test_spmm_plan_survives_pytree_roundtrip():
                                   np.asarray(t.to_dense()))
 
 
+@pytest.mark.pallas_interpret
 def test_nmg_spmm_zero_and_ones_b():
     """B = 0 gives exactly 0; B = ones gives per-row sums of kept values
     (catches accumulator-init and index-offset bugs independently of the
@@ -255,3 +261,75 @@ def test_nmg_spmm_zero_and_ones_b():
     want = np.asarray(t.to_dense()).sum(axis=1, keepdims=True)
     np.testing.assert_allclose(np.asarray(o), np.broadcast_to(want, (8, 16)),
                                rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# tail shapes: nothing aligned to anything
+# ---------------------------------------------------------------------------
+
+# (R, K, N) where R is not a gr multiple, K is not a chunk-extent multiple,
+# and N is not a lane/tile multiple — the aligned grid above never exercises
+# the padding/crop paths where Pallas index bugs hide
+TAIL_SHAPES = [
+    (7, 100, 129),
+    (13, 52, 31),
+    (33, 200, 257),
+    (1, 96, 1),
+]
+
+
+@pytest.mark.pallas_interpret
+@pytest.mark.parametrize("fmt", [(1, 4, 4, 2), (2, 4, 2, 4), (2, 4, 16, 8)],
+                         ids=lambda f: "{}:{}:{}gr{}".format(*f))
+@pytest.mark.parametrize("shape", TAIL_SHAPES,
+                         ids=lambda s: "x".join(map(str, s)))
+def test_nmg_spmm_tail_shapes_both_schedules(fmt, shape):
+    """Unaligned R/K/N through both Pallas schedules: each matches the
+    oracle, and streamed == grid **bitwise** (identical chunk accumulation
+    order is the schedule contract)."""
+    n, m, g, gr = fmt
+    R, K, N = shape
+    x = jax.random.normal(KEY, (R, K))
+    b = jax.random.normal(jax.random.PRNGKey(1), (K, N))
+    t = nmg.dense_to_grouped_nm(x, n=n, m=m, g=g, gr=gr)
+    ref = np.asarray(kref.nmg_spmm_ref(t, b))
+    grid = nmg_spmm_pallas(t, b, interpret=True, stream=False)
+    strm = nmg_spmm_pallas(t, b, interpret=True, stream=True)
+    assert grid.shape == strm.shape == (R, N)
+    np.testing.assert_array_equal(np.asarray(strm), np.asarray(grid))
+    np.testing.assert_allclose(np.asarray(strm), ref, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.pallas_interpret
+@pytest.mark.parametrize("shape", TAIL_SHAPES,
+                         ids=lambda s: "x".join(map(str, s)))
+def test_nmg_gemv_tail_shapes(shape):
+    """Unaligned R/K through the decode kernel (narrow B): padding rows
+    must be cropped, not leak into the product."""
+    R, K, _ = shape
+    x = jax.random.normal(KEY, (R, K))
+    b = jax.random.normal(jax.random.PRNGKey(1), (K, 3))
+    t = nmg.dense_to_grouped_nm(x, n=1, m=4, g=4, gr=2)
+    out = nmg_gemv_pallas(t, b, interpret=True)
+    assert out.shape == (R, 3)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(kref.nmg_spmm_ref(t, b)),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("delta", [-1, 0, 1])
+def test_nmg_linear_straddles_decode_m_max(delta):
+    """M = decode_m_max - 1 / exactly / + 1: the route flips at the
+    boundary but values and dtype never change."""
+    w = jax.random.normal(KEY, (96, 64))
+    wt = nmg.dense_to_grouped_nm(w, n=2, m=4, g=2, gr=4, sparse_dim=0)
+    rows = kops.DECODE_M_MAX + delta
+    x = jax.random.normal(jax.random.PRNGKey(2), (rows, 96))
+    kops.reset_kernel_counters()
+    y = kops.nmg_linear(x, wt)
+    counts = kops.kernel_counters()
+    path = "spmm" if delta > 0 else "gemv"
+    assert counts.get(("nmg_linear", f"{path}[default]")) == 1, counts
+    assert y.dtype == x.dtype and y.shape == (rows, 64)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ wt.to_dense()),
+                               rtol=1e-3, atol=1e-3)

@@ -15,6 +15,7 @@ KEY = jax.random.PRNGKey(3)
 @pytest.mark.parametrize("n,m,g,gr", [
     (2, 4, 1, 1), (2, 4, 2, 4), (1, 4, 4, 2), (3, 6, 1, 2), (1, 2, 8, 8),
 ])
+@pytest.mark.pallas_interpret
 @pytest.mark.parametrize("shape", [(16, 96, 64), (8, 192, 128)])
 def test_nmg_spmm_pallas_allclose(n, m, g, gr, shape):
     R, K, N = shape
@@ -27,6 +28,7 @@ def test_nmg_spmm_pallas_allclose(n, m, g, gr, shape):
                                rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.pallas_interpret
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_nmg_spmm_dtypes(dtype):
     x = jax.random.normal(KEY, (8, 96)).astype(dtype)
@@ -39,6 +41,7 @@ def test_nmg_spmm_dtypes(dtype):
                                rtol=tol, atol=tol)
 
 
+@pytest.mark.pallas_interpret
 def test_nmg_spmm_xla_matches_pallas():
     x = jax.random.normal(KEY, (16, 192))
     b = jax.random.normal(jax.random.PRNGKey(1), (192, 64))
@@ -62,6 +65,7 @@ def test_nmg_linear_orientation():
     )
 
 
+@pytest.mark.pallas_interpret
 @pytest.mark.parametrize("n,m", [(1, 4), (2, 4), (2, 8), (3, 6), (1, 10)])
 @pytest.mark.parametrize("shape", [(32, 64), (7, 130), (256, 520)])
 def test_nm_mask_kernel_allclose(n, m, shape):
@@ -71,6 +75,7 @@ def test_nm_mask_kernel_allclose(n, m, shape):
     assert bool(jnp.all(got == want))
 
 
+@pytest.mark.pallas_interpret
 def test_nm_mask_tie_breaking():
     """Exact tie-break agreement with top_k (lowest index wins)."""
     x = jnp.ones((4, 16))
@@ -79,6 +84,7 @@ def test_nm_mask_tie_breaking():
     assert bool(jnp.all(got == want))
 
 
+@pytest.mark.pallas_interpret
 @pytest.mark.parametrize("shape", [(32, 48, 40), (64, 64, 64), (33, 70, 9)])
 @pytest.mark.parametrize("threshold", [0.5, 2.0])
 def test_fused_matmul_threshold_allclose(shape, threshold):

@@ -1,0 +1,262 @@
+"""Differential tests for the decode megakernels (kernels/nmg_fused.py).
+
+The fusion contract is *bitwise* equivalence, not allclose: the fused QKV
+launch runs the identical per-chunk accumulation the per-projection gemv
+runs (same kernel body over row-concatenated operands), and the fused
+gated-FFN epilogue replays the sequential cast/split/act/multiply ops
+exactly.  Any kernel change that reorders the arithmetic breaks these
+tests on purpose.
+
+Three layers of evidence:
+
+* fused ≡ sequential bitwise per dtype (f32 accumulation pinned), on both
+  the Pallas-interpret and XLA backends, plus allclose vs the ``ref.py``
+  oracles (the trivially-auditable implementations);
+* ``kernel_counters`` proof that the fused route is **one** launch per
+  decode step (the sequential per-projection counters stay silent);
+* a hypothesis property that routing — table vetoes vs shipped defaults —
+  never changes outputs, only which kernel computed them.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import nmg
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.kernels.nmg_fused import (fusable_ffn, fusable_qkv,
+                                     nmg_ffn_pallas, nmg_qkv_pallas)
+from repro.kernels.nmg_gemv import nmg_gemv_pallas
+from repro.tune import routing
+from repro.tune.table import TuningTable
+
+from tests._hypothesis_compat import given, settings, st
+
+KEY = jax.random.PRNGKey(7)
+FMT = (1, 4, 8, 64)  # the fig11 serving format
+D = 256
+
+
+def _proj(key, R, dtype=jnp.float32, fmt=FMT):
+    n, m, g, gr = fmt
+    w = jax.random.normal(key, (D, R)).astype(dtype)
+    return nmg.dense_to_grouped_nm(w, n=n, m=m, g=g, gr=gr, sparse_dim=0)
+
+
+def _qkv_group(dtype=jnp.float32):
+    ks = jax.random.split(KEY, 3)
+    return (_proj(ks[0], 256, dtype), _proj(ks[1], 128, dtype),
+            _proj(ks[2], 128, dtype))
+
+
+# ---------------------------------------------------------------------------
+# bitwise: fused == sequential per dtype, both backends
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.pallas_interpret
+@pytest.mark.parametrize("out_dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_qkv_pallas_bitwise_equals_sequential(out_dtype):
+    """One megakernel launch == three gemv launches, bit for bit (shared
+    kernel body over concatenated operands; f32 accumulation pinned by the
+    bf16 case, whose epilogue rounds once)."""
+    ws = _qkv_group()
+    b = jax.random.normal(jax.random.PRNGKey(1), (D, 4))
+    fused = nmg_qkv_pallas(ws, b, out_dtype=out_dtype, interpret=True)
+    for w, f in zip(ws, fused):
+        s = nmg_gemv_pallas(w, b, out_dtype=out_dtype, interpret=True)
+        assert f.dtype == jnp.dtype(out_dtype)
+        np.testing.assert_array_equal(np.asarray(f), np.asarray(s))
+
+
+@pytest.mark.parametrize("out_dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_qkv_xla_bitwise_equals_sequential(out_dtype):
+    ws = _qkv_group()
+    b = jax.random.normal(jax.random.PRNGKey(1), (D, 4))
+    fused = kops.nmg_qkv_xla(ws, b, out_dtype=out_dtype)
+    for w, f in zip(ws, fused):
+        s = kops.nmg_gemv_xla(w, b, out_dtype=out_dtype)
+        np.testing.assert_array_equal(np.asarray(f), np.asarray(s))
+
+
+def test_fused_qkv_matches_oracle():
+    ws = _qkv_group()
+    b = jax.random.normal(jax.random.PRNGKey(1), (D, 4))
+    want = kref.nmg_qkv_ref(ws, b)
+    for backend in (True, False):  # pallas, xla
+        got = kops.nmg_qkv(ws, b, use_pallas=backend)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                       rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.pallas_interpret
+@pytest.mark.parametrize("act", ["silu", "gelu"])
+@pytest.mark.parametrize("out_dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_ffn_pallas_bitwise_equals_sequential(act, out_dtype):
+    """Projection + split + act + gate in one launch == the sequential
+    ops: the kernel epilogue casts the two f32 accumulators to the
+    activation dtype *first* and gates *second*, exactly the order the
+    model path runs them.  silu is pinned **bitwise** (the logistic
+    lowers to one codegen-stable primitive); approximate-gelu's tanh
+    polynomial compiles to ulp-different code depending on what XLA fuses
+    it with, so gelu pins tight allclose instead."""
+    wi = _proj(KEY, 2 * 128)                   # packed [D, 2F]
+    b = jax.random.normal(jax.random.PRNGKey(2), (D, 4))
+    hh = nmg_gemv_pallas(wi, b, out_dtype=out_dtype, interpret=True)
+    u, v = jnp.split(hh.T, 2, axis=-1)         # the model splits [M, 2F]
+    if act == "silu":
+        seq = (jax.nn.silu(u) * v).T
+    else:
+        seq = (jax.nn.gelu(u, approximate=True) * v).T
+    fused = nmg_ffn_pallas(wi, b, act=act, out_dtype=out_dtype,
+                           interpret=True)
+    assert fused.dtype == jnp.dtype(out_dtype)
+    if act == "silu":
+        np.testing.assert_array_equal(np.asarray(fused), np.asarray(seq))
+    else:
+        np.testing.assert_allclose(
+            np.asarray(fused).astype(np.float32),
+            np.asarray(seq).astype(np.float32), rtol=1e-4, atol=1e-4,
+        )
+
+
+@pytest.mark.parametrize("act", ["silu", "gelu"])
+def test_fused_ffn_matches_oracle(act):
+    wi = _proj(KEY, 2 * 128)
+    b = jax.random.normal(jax.random.PRNGKey(2), (D, 4))
+    want = np.asarray(kref.nmg_ffn_ref(wi, b, act=act))
+    for backend in (True, False):
+        got = kops.nmg_ffn(wi, b, act=act, use_pallas=backend)
+        np.testing.assert_allclose(np.asarray(got), want,
+                                   rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# eligibility and launch-count evidence
+# ---------------------------------------------------------------------------
+
+
+def test_fusability_checks():
+    wq, wk, wv = _qkv_group()
+    assert fusable_qkv((wq, wk, wv))
+    other_fmt = _proj(KEY, 128, fmt=(2, 4, 8, 64))
+    assert not fusable_qkv((wq, other_fmt))    # mixed formats
+    assert not fusable_qkv((wq, jnp.zeros((D, 128))))  # dense member
+    assert not fusable_qkv(())
+    wi = _proj(KEY, 2 * 128)
+    assert fusable_ffn(wi, 128)
+    assert not fusable_ffn(wi, 64)             # wrong F
+    assert not fusable_ffn(jnp.zeros((D, 256)), 128)
+
+
+def test_fused_route_is_single_launch_per_step():
+    """kernel_counters: a fused decode step traces one ("nmg_qkv",
+    "fused[...]") route and NO per-projection nmg_gemv/nmg_linear routes —
+    the megakernel claim is exactly 'one launch where three were'."""
+    ws = _qkv_group()
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, D))  # decode-shaped
+    kops.reset_kernel_counters()
+    ys = kops.maybe_fused_qkv(x, ws)
+    assert ys is not None
+    counts = kops.kernel_counters()
+    assert counts.get(("nmg_qkv", "fused[default]")) == 1, counts
+    assert not any(k[0] in ("nmg_gemv", "nmg_linear") for k in counts), counts
+
+    kops.reset_kernel_counters()
+    y = kops.maybe_fused_ffn(x, _proj(KEY, 2 * 128), act="silu")
+    assert y is not None and y.shape == (4, 128)
+    counts = kops.kernel_counters()
+    assert counts.get(("nmg_ffn", "fused[default]")) == 1, counts
+    assert not any(k[0] in ("nmg_gemv", "nmg_linear") for k in counts), counts
+
+
+def test_prefill_shaped_x_declines_fusion():
+    """Wide x (prefill regime) must fall back (None) so the SpMM path
+    keeps serving the large-M shapes it wins."""
+    ws = _qkv_group()
+    x = jax.random.normal(jax.random.PRNGKey(3), (kops.DECODE_M_MAX + 1, D))
+    assert kops.maybe_fused_qkv(x, ws) is None
+    assert kops.maybe_fused_ffn(x, _proj(KEY, 2 * 128), act="silu") is None
+
+
+def test_table_veto_falls_back_bitwise():
+    """A table that vetoes fusion changes the launch structure, not one
+    bit of output."""
+    ws = _qkv_group()
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, D))
+    fused = kops.maybe_fused_qkv(x, ws)
+    assert fused is not None
+    tab = TuningTable.for_device()
+    tab.entries["fused_qkv"] = False
+    routing.set_active_table(tab)
+    try:
+        kops.reset_kernel_counters()
+        assert kops.maybe_fused_qkv(x, ws) is None
+        counts = kops.kernel_counters()
+        assert counts.get(("nmg_qkv", "sequential[table]")) == 1, counts
+        seq = tuple(kops.nmg_linear(x, w) for w in ws)
+    finally:
+        routing.clear_active_table()
+    for f, s in zip(fused, seq):
+        np.testing.assert_array_equal(np.asarray(f), np.asarray(s))
+
+
+# ---------------------------------------------------------------------------
+# property: routing never changes outputs
+# ---------------------------------------------------------------------------
+
+_WS_CACHE = {}
+
+
+def _cached_group(dtype_name):
+    if dtype_name not in _WS_CACHE:
+        _WS_CACHE[dtype_name] = _qkv_group(jnp.dtype(dtype_name))
+    return _WS_CACHE[dtype_name]
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m_rows=st.integers(min_value=1, max_value=8),
+    fuse_qkv=st.booleans(),
+    fuse_ffn=st.booleans(),
+    thr=st.sampled_from([None, 4, 16]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_routing_never_changes_outputs(m_rows, fuse_qkv, fuse_ffn, thr, seed):
+    """Hypothesis property: for any table (fusion vetoes, decode_m_max
+    overrides) the linear-level results equal the default-routed results
+    bitwise.  Routing picks kernels; kernels agree."""
+    ws = _cached_group("float32")
+    wi = ws[0]  # square [D, D] packed weight doubles as a 2F=256 gated pair
+    x = jax.random.normal(jax.random.PRNGKey(seed), (m_rows, D))
+
+    def run_all():
+        qkv = kops.maybe_fused_qkv(x, ws)
+        if qkv is None:
+            qkv = tuple(kops.nmg_linear(x, w) for w in ws)
+        ffn = kops.maybe_fused_ffn(x, wi, act="silu")
+        if ffn is None:
+            hh = kops.nmg_linear(x, wi)
+            u, v = jnp.split(hh, 2, axis=-1)
+            ffn = jax.nn.silu(u) * v
+        return [np.asarray(a) for a in (*qkv, ffn)]
+
+    routing.clear_active_table()
+    want = run_all()
+
+    tab = TuningTable.for_device()
+    tab.entries["fused_qkv"] = fuse_qkv
+    tab.entries["fused_ffn"] = fuse_ffn
+    if thr is not None:
+        tab.entries["decode_m_max"] = thr
+    routing.set_active_table(tab)
+    try:
+        got = run_all()
+    finally:
+        routing.clear_active_table()
+
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(w, g)
