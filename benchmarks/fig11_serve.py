@@ -348,7 +348,12 @@ def main(quick=False, out_json=OUT_JSON, table=None):
     # explicit --table only: this benchmark's integrity gates differ
     # between tuned and untuned routing, so a stray $REPRO_TUNE_TABLE in
     # the environment must not silently flip the run's mode
-    tuning = load_table_cli(table) if table else None
+    try:
+        tuning = load_table_cli(table) if table else None
+    except ValueError as e:
+        # a corrupt/stale --table must abort, not silently benchmark the
+        # untuned defaults while labelling the run tuned
+        raise SystemExit(f"fig11_serve: {e}")
     if tuning is not None and len(tuning) == 0:
         # distinguish "no section for this device" from the
         # missing-shape-buckets abort the provenance gate would raise

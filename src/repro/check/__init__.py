@@ -1,0 +1,58 @@
+"""repro.check — static sparse-program verifier.
+
+Proves the fast path before it runs: traces the real serve/train entry
+callables to jaxprs (and optionally compiled HLO), runs the R1-R7 rule
+passes over them, and cross-checks static route predictions against
+runtime kernel counters (``--differential``).
+
+CLI::
+
+    python -m repro.check [--entry serve|decode|prefill|train]...
+                          [--config NAME]... [--strict] [--json PATH]
+                          [--ignore RULE[:entry-glob]]... [--differential]
+                          [--no-hlo]
+"""
+
+from __future__ import annotations
+
+from repro.check.diagnostics import Diagnostic, Report, Severity
+from repro.check.rules import Rule, all_rules, run_rules
+
+__all__ = ["Diagnostic", "Report", "Severity", "Rule", "all_rules",
+           "run_rules", "run_check", "preflight"]
+
+
+def run_check(entries, *, arch: str = "bert-base-sten", hlo: bool = True,
+              differential: bool = False, ignore=()) -> Report:
+    """Build the entry programs, run every rule over each, and (optionally)
+    the static-vs-runtime differential.  Returns the filtered Report."""
+    from repro.check.entries import entry_programs
+
+    report = Report()
+    seen: set = set()
+    for entry in entries:
+        for program in entry_programs(entry, arch=arch, hlo=hlo):
+            if program.name in seen:
+                continue
+            seen.add(program.name)
+            report.programs.append(program.name)
+            report.extend(run_rules(program))
+    if differential:
+        from repro.check.differential import differential_check
+
+        diags, _ = differential_check(arch=arch)
+        report.programs.append(f"{arch}/differential")
+        report.extend(diags)
+    return report.filtered(ignore)
+
+
+def preflight(entries, *, arch: str = "bert-base-sten") -> int:
+    """Opt-in ``--check`` hook for launch/serve.py and launch/train.py:
+    fast (no-HLO) pass over the given entries, report to stdout, return a
+    process exit code (nonzero only on ERROR diagnostics)."""
+    report = run_check(entries, arch=arch, hlo=False)
+    rendered = report.render()
+    if rendered:
+        print(rendered)
+    print(report.summary())
+    return report.exit_code(strict=False)

@@ -1,0 +1,133 @@
+"""Explain/differential mode: static route predictions vs runtime
+counters.
+
+``kernels/ops.py:predict_route`` mirrors the router's branch logic
+without tracing anything; this module runs a quick engine warmup (the
+same ``warmup_engine`` hook the benchmarks use) over prompt lengths that
+straddle the gemv/spmm crossover, then cross-checks the predicted
+``kernel_counters`` keys against what the traces actually recorded.  Any
+disagreement is an ERROR: either the predictor (and therefore the
+checker's static story) or the router itself is wrong, and both are
+load-bearing.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+import jax
+import numpy as np
+
+from repro.check.diagnostics import Diagnostic, Severity
+from repro.check.entries import CHECK_GR, CHECK_NM, check_config
+
+__all__ = ["differential_check"]
+
+#: kernels whose (kernel, path) keys the router itself emits — the
+#: comparison surface (inner pallas/xla keys ride along with these)
+_ROUTED = ("nmg_linear", "nmg_ffn", "nmg_qkv")
+
+
+def _predicted_keys(cfg, sparse_params, widths) -> set:
+    """Every (kernel, path) key the router should record when the engine
+    traces each sparse weight at each activation width."""
+    from repro.core.layouts import GroupedNMTensor
+    kops = importlib.import_module("repro.kernels.ops")
+
+    leaves = jax.tree_util.tree_flatten_with_path(
+        sparse_params, is_leaf=lambda x: isinstance(x, GroupedNMTensor)
+    )[0]
+    keys: set = set()
+    for path, w in leaves:
+        if not isinstance(w, GroupedNMTensor):
+            continue
+        name = jax.tree_util.keystr(path)
+        gated_wi = cfg.gated_mlp and "wi" in name
+        for m_width in widths:
+            op = "mm_gated" if gated_wi else "nmg_linear"
+            keys.update(kops.predict_route(op, w, M=m_width,
+                                           dtype=cfg.jdtype))
+    return {k for k in keys if k[0] in _ROUTED}
+
+
+def differential_check(*, arch: str = "bert-base-sten",
+                       prompt_lens: tuple = (24, 8), max_slots: int = 4,
+                       seed: int = 0) -> tuple[list, dict]:
+    """-> (diagnostics, detail).  Empty diagnostics means every routed op
+    agreed between the static prediction and the runtime counters."""
+    from repro.models import init_lm
+    from repro.serve import Request, SamplingParams
+    from repro.serve.engine import sparsify_for_serving, warmup_engine
+
+    disp = importlib.import_module("repro.core.dispatch")
+    kops = importlib.import_module("repro.kernels.ops")
+
+    cfg = check_config(arch)
+    params = init_lm(jax.random.PRNGKey(seed), cfg)
+    n, m, g = CHECK_NM
+    sparse = sparsify_for_serving(params, n, m, g, gr=CHECK_GR)
+
+    # decode always runs at the full slot batch; prefill at each prompt len
+    widths = sorted({max_slots, *prompt_lens})
+    predicted = _predicted_keys(cfg, sparse, widths)
+
+    rng = np.random.default_rng(seed)
+    reqs = [
+        Request(uid=i, prompt=rng.integers(0, cfg.vocab, size=plen,
+                                           dtype=np.int32),
+                max_new_tokens=2, sampling=SamplingParams(greedy=True))
+        for i, plen in enumerate(prompt_lens)
+    ]
+    kern_before = kops.kernel_counters()
+    disp_before = disp.dispatch_counters()
+    warmup_engine(sparse, cfg, reqs, engine_kwargs=dict(
+        max_slots=max_slots, max_seq_len=max(prompt_lens) + 16,
+        decode_chunk=4,
+    ))
+    observed = {
+        k for k, v in kops.kernel_counters().items()
+        if v > kern_before.get(k, 0) and k[0] in _ROUTED
+    }
+    fallbacks = {
+        k: v - disp_before.get(k, 0)
+        for k, v in disp.dispatch_counters().items()
+        if v > disp_before.get(k, 0) and k[0] == "dense_fallback"
+    }
+
+    diags = []
+    entry = f"{arch}/differential"
+    for key in sorted(predicted - observed):
+        diags.append(Diagnostic(
+            rule="DIFF", severity=Severity.ERROR, entry=entry,
+            message=f"predict_route expected counter {key} but the warmup "
+                    f"never recorded it — the static route model is ahead "
+                    f"of the runtime router",
+            op=str(key), location="kernel-counters",
+            fix="align kernels.ops.predict_route with the routing branch "
+                "it mirrors",
+        ))
+    for key in sorted(observed - predicted):
+        diags.append(Diagnostic(
+            rule="DIFF", severity=Severity.ERROR, entry=entry,
+            message=f"runtime recorded counter {key} that predict_route "
+                    f"did not predict — the router took a path the static "
+                    f"model does not know about",
+            op=str(key), location="kernel-counters",
+            fix="align kernels.ops.predict_route with the routing branch "
+                "it mirrors",
+        ))
+    for key, count in sorted(fallbacks.items()):
+        diags.append(Diagnostic(
+            rule="DIFF", severity=Severity.ERROR, entry=entry,
+            message=f"warmup traced through the dense fallback {key} "
+                    f"({count}x) — the quick run is not on the sparse "
+                    f"fast path at all",
+            op=str(key), location="dispatch-counters",
+        ))
+    detail = {
+        "predicted": sorted(map(str, predicted)),
+        "observed": sorted(map(str, observed)),
+        "widths": widths,
+        "agree": not diags,
+    }
+    return diags, detail

@@ -1,0 +1,105 @@
+"""Entry-point builders: the real serving/training programs as
+:class:`~repro.check.program.CheckedProgram` lists.
+
+The checker traces the *same callables the runtime compiles* —
+``serve/engine.py:serve_programs`` for the engine's decode / chunked
+decode / prefill, and ``launch/train.py:make_train_step`` for training —
+at the smoke scale (CPU-tractable; the program *structure* is what the
+rules inspect, and it is scale-invariant).  Check configs pin
+``dtype=float32``: with x64 disabled f32 is the widest reachable float,
+so any R3 hit is a genuine promotion bug rather than bf16 noise.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.check.program import CheckedProgram, build_program
+from repro.configs import get_smoke
+
+__all__ = ["ENTRY_NAMES", "CHECK_NM", "CHECK_GR", "check_config",
+           "entry_programs"]
+
+ENTRY_NAMES = ("serve", "decode", "prefill", "train")
+
+#: n:m:g format + row sharing the check entries sparsify with (the fig11
+#: serving format family)
+CHECK_NM = (1, 4, 8)
+CHECK_GR = 64
+
+#: engine knobs the serve entries are traced at
+CHECK_MAX_SLOTS = 4
+CHECK_MAX_SEQ = 64
+CHECK_DECODE_CHUNK = 4
+CHECK_PROMPT_LEN = 24     # > DECODE_M_MAX so prefill exercises the SpMM path
+
+
+def check_config(arch: str = "bert-base-sten"):
+    """The smoke-scaled config the checker traces entries at, pinned to
+    float32 (see module docstring)."""
+    return get_smoke(arch).scaled(dtype="float32")
+
+
+def _serve_programs(arch: str, hlo: bool) -> list[CheckedProgram]:
+    from repro.serve.engine import serve_programs, sparsify_for_serving
+
+    cfg = check_config(arch)
+    params = init_params(cfg)
+    n, m, g = CHECK_NM
+    sparse = sparsify_for_serving(params, n, m, g, gr=CHECK_GR)
+    progs = serve_programs(
+        sparse, cfg, max_slots=CHECK_MAX_SLOTS, max_seq_len=CHECK_MAX_SEQ,
+        decode_chunk=CHECK_DECODE_CHUNK, prompt_len=CHECK_PROMPT_LEN,
+    )
+    out = []
+    for pname, (fn, args) in progs.items():
+        decode = pname.startswith("decode")
+        out.append(build_program(
+            f"{arch}/serve:{pname}", fn, args, model_dtype=cfg.jdtype,
+            decode_path=True, hlo=hlo,
+            decode_m=CHECK_MAX_SLOTS if decode else None,
+            prefill_n=None if decode else CHECK_PROMPT_LEN,
+        ))
+    return out
+
+
+def _train_programs(arch: str, hlo: bool) -> list[CheckedProgram]:
+    from repro.launch.train import build_sparse_params, make_train_step
+    from repro.optim import AdamWConfig, adamw_init
+
+    cfg = check_config(arch)
+    params = build_sparse_params(init_params(cfg), 0.5)
+    opt_state = adamw_init(params)
+    step = make_train_step(cfg, AdamWConfig(lr=1e-3))
+    batch = {
+        "tokens": jnp.asarray(np.zeros((2, 16), np.int32)),
+        "labels": jnp.asarray(np.zeros((2, 16), np.int32)),
+    }
+    return [build_program(
+        f"{arch}/train:step", step, (params, opt_state, batch),
+        model_dtype=cfg.jdtype, decode_path=False, hlo=hlo,
+        prefill_n=16,
+    )]
+
+
+def init_params(cfg):
+    from repro.models import init_lm
+
+    return init_lm(jax.random.PRNGKey(0), cfg)
+
+
+def entry_programs(entry: str, *, arch: str = "bert-base-sten",
+                   hlo: bool = True) -> list[CheckedProgram]:
+    """Build the CheckedPrograms of one ``--entry`` for one config."""
+    if entry == "train":
+        return _train_programs(arch, hlo)
+    if entry not in ENTRY_NAMES:
+        raise ValueError(f"unknown entry {entry!r}; pick from {ENTRY_NAMES}")
+    progs = _serve_programs(arch, hlo)
+    if entry == "decode":
+        return [p for p in progs if ":decode" in p.name]
+    if entry == "prefill":
+        return [p for p in progs if ":prefill" in p.name]
+    return progs

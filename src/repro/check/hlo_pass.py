@@ -1,0 +1,151 @@
+"""Compiled-HLO detectors: the post-XLA halves of R1/R3/R4.
+
+These reuse ``launch/hlo_analysis.py``'s module parser, so the checker
+sees the program exactly as the structural roofline analyzer does —
+computations, instructions, while bodies, fusion calls.  The HLO pass
+catches what fusion/DCE could *introduce or fail to remove* after the
+jaxpr level: a densified weight that survived to a real ``dot``, a host
+custom-call living inside a compiled ``while`` body, and any f64 the
+backend materialized.
+"""
+
+from __future__ import annotations
+
+import re
+
+from repro.check.diagnostics import Diagnostic, Severity
+from repro.launch import hlo_analysis as H
+
+__all__ = ["hlo_r1", "hlo_r3", "hlo_r4"]
+
+_PAD_SLACK = 256
+
+#: custom-call targets that bounce through the host
+_HOST_CALL_RE = re.compile(
+    r"custom_call_target=\"[^\"]*(callback|host|infeed|outfeed)[^\"]*\"",
+    re.IGNORECASE,
+)
+_DIMS_RE = re.compile(r"\w+\[([\d,]*)\]")
+
+
+def _result_dims(type_text: str):
+    m = _DIMS_RE.search(type_text)
+    if not m:
+        return ()
+    return tuple(int(d) for d in m.group(1).split(",") if d.strip())
+
+
+def _weight_match(dims, weights: dict):
+    if len(dims) != 2:
+        return None
+    d0, d1 = dims
+    for path, w in weights.items():
+        dense = getattr(w, "dense_shape", None) or getattr(w, "shape", None)
+        if dense is None or len(dense) != 2:
+            continue
+        a, b = int(dense[0]), int(dense[1])
+        for x, y in ((a, b), (b, a)):
+            if x <= d0 <= x + _PAD_SLACK and y <= d1 <= y + _PAD_SLACK:
+                return path
+    return None
+
+
+def hlo_r1(program) -> list:
+    """Densified-weight-reaches-dot, post-compilation: a ``scatter`` whose
+    result is shaped like a densified sparse weight flowing (within its
+    computation) into a ``dot``."""
+    if not program.hlo_text or not program.sparse_weights:
+        return []
+    comps, shapes, _, _ = H.parse_module(program.hlo_text)
+    diags = []
+    for cname, insts in comps.items():
+        tainted = {}
+        for inst in insts:
+            if inst.op == "scatter":
+                path = _weight_match(_result_dims(inst.type_text),
+                                     program.sparse_weights)
+                if path is not None:
+                    tainted[inst.name] = path
+                    continue
+            hit = next((tainted[o] for o in H.inst_operands(inst)
+                        if o in tainted), None)
+            if hit is None:
+                continue
+            if inst.op == "dot":
+                diags.append(Diagnostic(
+                    rule="R1", severity=Severity.ERROR, entry=program.name,
+                    message=f"compiled module contracts a scatter-densified "
+                            f"copy of sparse weight {hit!r} with a dense "
+                            f"dot — densification survived to the backend",
+                    op=f"dot in %{cname}", location="hlo",
+                    fix="route the contraction through the registered "
+                        "sparse op instead of densifying the weight",
+                ))
+            else:
+                tainted[inst.name] = hit
+    return diags
+
+
+def hlo_r3(program) -> list:
+    """f64 materialized anywhere in the compiled module: with x64 disabled
+    this should be unreachable, so its presence means a double-precision
+    literal or numpy scalar leaked into the decode program."""
+    if not program.hlo_text or not program.decode_path:
+        return []
+    comps, _, _, _ = H.parse_module(program.hlo_text)
+    diags = []
+    for cname, insts in comps.items():
+        for inst in insts:
+            if inst.op in ("parameter", "constant"):
+                continue
+            if "f64[" in inst.type_text:
+                diags.append(Diagnostic(
+                    rule="R3", severity=Severity.ERROR, entry=program.name,
+                    message="compiled decode program materializes f64 — a "
+                            "double-precision value leaked past the model "
+                            "dtype",
+                    op=f"{inst.op} in %{cname}", location="hlo",
+                    fix="cast host-side inputs/literals to the model dtype "
+                        "before tracing",
+                ))
+                return diags      # one finding is enough evidence
+    return diags
+
+
+def hlo_r4(program) -> list:
+    """Host custom-call inside a compiled ``while`` body: the compiled
+    decode chunk would synchronize with the host every iteration."""
+    if not program.hlo_text:
+        return []
+    comps, _, _, _ = H.parse_module(program.hlo_text)
+    # computations reachable from a while body/condition
+    loop_comps: set[str] = set()
+    stack = []
+    for insts in comps.values():
+        for inst in insts:
+            if inst.op == "while":
+                for m in re.finditer(r"(?:body|condition)=%([\w\.\-]+)",
+                                     inst.line):
+                    stack.append(m.group(1))
+    while stack:
+        name = stack.pop()
+        if name in loop_comps or name not in comps:
+            continue
+        loop_comps.add(name)
+        for inst in comps[name]:
+            for m in re.finditer(
+                r"(?:calls|to_apply|body|condition)=%([\w\.\-]+)", inst.line
+            ):
+                stack.append(m.group(1))
+    diags = []
+    for name in sorted(loop_comps):
+        for inst in comps[name]:
+            if inst.op == "custom-call" and _HOST_CALL_RE.search(inst.line):
+                diags.append(Diagnostic(
+                    rule="R4", severity=Severity.ERROR, entry=program.name,
+                    message="host custom-call inside a compiled while body "
+                            "— per-iteration host sync in the device loop",
+                    op=f"custom-call in %{name}", location="hlo:while-body",
+                    fix="hoist the callback out of the loop body",
+                ))
+    return diags

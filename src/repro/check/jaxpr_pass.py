@@ -1,0 +1,221 @@
+"""Jaxpr-walker detectors: the trace-level halves of R1/R3/R4/R5.
+
+The walker recurses into every subjaxpr (pjit bodies, scan/while bodies,
+cond branches, custom-derivative calls), tracking whether the current
+scope is inside a device loop — that flag is what makes R4
+("host callback *inside the decode loop*") precise instead of a blanket
+callback ban.
+"""
+
+from __future__ import annotations
+
+from typing import Iterator
+
+import jax.numpy as jnp
+
+from repro.check.diagnostics import Diagnostic, Severity
+
+__all__ = ["iter_scopes", "jaxpr_r1", "jaxpr_r3", "jaxpr_r4", "jaxpr_r5"]
+
+#: primitives that run a subjaxpr once per loop iteration
+_LOOP_PRIMS = frozenset({"scan", "while", "fori_loop"})
+#: host-callback primitives (any of these inside a loop is a per-iteration
+#: host sync)
+_CALLBACK_PRIMS = frozenset({
+    "pure_callback", "io_callback", "debug_callback", "callback",
+    "host_callback", "outside_call",
+})
+#: scatter family — what a traced ``to_dense`` of an n:m layout lowers to
+_SCATTER_PRIMS = frozenset({
+    "scatter", "scatter-add", "scatter_add", "scatter-mul", "scatter_mul",
+})
+#: sinks allowed to consume a promoted value without tripping R3: matmul
+#: accumulation and reductions legitimately widen (the kernels' own f32
+#: accumulator contract); elementwise math in the wide dtype is the bug
+_PROMOTE_SINKS = frozenset({
+    "dot_general", "reduce_sum", "reduce_max", "reduce_min", "reduce_prod",
+})
+#: padding slack when matching a scatter output against a sparse weight's
+#: dense shape (layouts pad R to the group row-sharing and K to the block
+#: grid; both pads are bounded by one tile)
+_PAD_SLACK = 256
+
+
+def _subjaxprs(params: dict):
+    """Every jaxpr-valued entry of an eqn's params (closed or open)."""
+    for v in params.values():
+        vals = v if isinstance(v, (tuple, list)) else (v,)
+        for item in vals:
+            if hasattr(item, "jaxpr"):       # ClosedJaxpr
+                yield item.jaxpr
+            elif hasattr(item, "eqns"):      # raw Jaxpr
+                yield item
+
+
+def iter_scopes(closed_jaxpr) -> Iterator[tuple]:
+    """Yield ``(jaxpr, in_loop)`` for the top jaxpr and every subjaxpr,
+    ``in_loop`` true once any enclosing primitive is a device loop."""
+    seen = set()
+
+    def walk(jaxpr, in_loop):
+        if id(jaxpr) in seen:
+            return
+        seen.add(id(jaxpr))
+        yield jaxpr, in_loop
+        for eqn in jaxpr.eqns:
+            sub_loop = in_loop or eqn.primitive.name in _LOOP_PRIMS
+            for sub in _subjaxprs(eqn.params):
+                yield from walk(sub, sub_loop)
+
+    yield from walk(closed_jaxpr.jaxpr, False)
+
+
+def _shape_matches_weight(shape, weights: dict):
+    """Does a 2D scatter output look like a (padded) densified sparse
+    weight?  Returns the matching weight path or None."""
+    if len(shape) != 2:
+        return None
+    d0, d1 = int(shape[0]), int(shape[1])
+    for path, w in weights.items():
+        dense = getattr(w, "dense_shape", None) or getattr(w, "shape", None)
+        if dense is None or len(dense) != 2:
+            continue
+        a, b = int(dense[0]), int(dense[1])
+        for x, y in ((a, b), (b, a)):
+            if x <= d0 <= x + _PAD_SLACK and y <= d1 <= y + _PAD_SLACK:
+                return path
+    return None
+
+
+def jaxpr_r1(program) -> list:
+    """Silent densify: a scatter whose output is shaped like a densified
+    sparse weight, with a dense ``dot_general`` reachable downstream in
+    the same scope — i.e. ``w.to_dense() @ x`` smuggled past the sparse
+    kernels."""
+    if program.jaxpr is None or not program.sparse_weights:
+        return []
+    diags = []
+    for jaxpr, _ in iter_scopes(program.jaxpr):
+        # sources: scatter outputs matching a sparse weight's dense shape
+        sources = {}
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name not in _SCATTER_PRIMS:
+                continue
+            for outv in eqn.outvars:
+                path = _shape_matches_weight(
+                    getattr(outv.aval, "shape", ()), program.sparse_weights
+                )
+                if path is not None:
+                    sources[id(outv)] = path
+        if not sources:
+            continue
+        # forward dataflow: does any source reach a dot_general?
+        tainted = dict(sources)
+        for eqn in jaxpr.eqns:
+            hit = next((tainted[id(v)] for v in eqn.invars
+                        if id(v) in tainted), None)
+            if hit is None:
+                continue
+            if eqn.primitive.name == "dot_general":
+                diags.append(Diagnostic(
+                    rule="R1", severity=Severity.ERROR, entry=program.name,
+                    message=f"sparse weight {hit!r} is densified (scatter) "
+                            f"and then contracted by a dense dot_general — "
+                            f"the sparse fast path is silently bypassed",
+                    op="dot_general", location="jaxpr",
+                    fix="route the contraction through the registered "
+                        "sparse op (models.common.mm / kernels.ops."
+                        "nmg_linear) instead of w.to_dense() @ x",
+                ))
+                continue
+            for outv in eqn.outvars:
+                tainted[id(outv)] = hit
+    return diags
+
+
+def jaxpr_r3(program) -> list:
+    """Dtype promotion past the model dtype on the decode path, outside the
+    allowed accumulation sinks — what breaks the bitwise megakernel
+    contract."""
+    if program.jaxpr is None or not program.decode_path:
+        return []
+    model = jnp.dtype(program.model_dtype)
+    diags = []
+    for jaxpr, _ in iter_scopes(program.jaxpr):
+        consumers: dict[int, list] = {}
+        for eqn in jaxpr.eqns:
+            for v in eqn.invars:
+                if hasattr(v, "aval"):
+                    consumers.setdefault(id(v), []).append(eqn.primitive.name)
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name != "convert_element_type":
+                continue
+            outv = eqn.outvars[0]
+            out_dt = jnp.dtype(outv.aval.dtype)
+            if not jnp.issubdtype(out_dt, jnp.floating):
+                continue
+            if out_dt.itemsize <= model.itemsize:
+                continue
+            sinks = consumers.get(id(outv), [])
+            if sinks and all(s in _PROMOTE_SINKS for s in sinks):
+                continue    # f32 accumulation: the kernel contract itself
+            diags.append(Diagnostic(
+                rule="R3", severity=Severity.ERROR, entry=program.name,
+                message=f"decode-path value promoted to {out_dt.name} past "
+                        f"the model dtype {model.name} and consumed by "
+                        f"{sorted(set(sinks)) or 'the program output'} — "
+                        f"breaks the bitwise decode contract",
+                op="convert_element_type", location="jaxpr",
+                fix=f"keep elementwise math in {model.name}; widen only "
+                    f"inside matmul/reduction accumulation",
+            ))
+    return diags
+
+
+def jaxpr_r4(program) -> list:
+    """Host callback inside a device loop: every iteration of the decode
+    chunk (or training scan) would synchronize with the host."""
+    if program.jaxpr is None:
+        return []
+    diags = []
+    for jaxpr, in_loop in iter_scopes(program.jaxpr):
+        if not in_loop:
+            continue
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name in _CALLBACK_PRIMS:
+                diags.append(Diagnostic(
+                    rule="R4", severity=Severity.ERROR, entry=program.name,
+                    message="host callback inside a device loop — one "
+                            "host round-trip per iteration defeats the "
+                            "chunked (device-resident) decode/train loop",
+                    op=eqn.primitive.name, location="jaxpr:loop-body",
+                    fix="hoist the callback out of the scan/while body, or "
+                        "accumulate on device and fetch once per chunk",
+                ))
+    return diags
+
+
+def jaxpr_r5(program) -> list:
+    """Recompile hazard: weak-typed program inputs/outputs.  A weak-typed
+    argument retraces when the caller's Python literal changes flavor,
+    fragmenting the jit cache the engine relies on compiling exactly
+    once."""
+    if program.jaxpr is None:
+        return []
+    diags = []
+    jaxpr = program.jaxpr.jaxpr
+    for role, vs in (("input", jaxpr.invars), ("output", jaxpr.outvars)):
+        for v in vs:
+            aval = getattr(v, "aval", None)
+            if aval is not None and getattr(aval, "weak_type", False):
+                diags.append(Diagnostic(
+                    rule="R5", severity=Severity.WARNING, entry=program.name,
+                    message=f"weak-typed {role} "
+                            f"({getattr(aval, 'dtype', '?')}) — Python "
+                            f"scalars leak into the traced signature and "
+                            f"fragment the jit cache",
+                    op=role, location="jaxpr:signature",
+                    fix="pass numpy/jnp arrays with explicit dtypes "
+                        "instead of Python scalars",
+                ))
+    return diags

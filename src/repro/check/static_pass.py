@@ -1,0 +1,166 @@
+"""Trace-evidence detectors (dispatch counters, conversion log, routed
+VMEM estimates, device-kind budgets): R1's counter half, R2, R6, R7.
+
+The VMEM estimators mirror the block shapes of ``kernels/nmg_gemv.py``
+and ``kernels/nmg_spmm.py`` exactly — per grid step, the operand tiles +
+output tile + scratch a routed ``(tm | tn, target_depth, stream)`` config
+makes resident — and compare them against the per-device budget in
+``launch/hlo_analysis.HW_BY_KIND``.  An oversized tuned tile is caught
+*here*, before a real-TPU run hits the Mosaic allocator.
+"""
+
+from __future__ import annotations
+
+import collections
+import math
+
+import jax.numpy as jnp
+
+from repro.check.diagnostics import Diagnostic, Severity
+from repro.launch.hlo_analysis import hw_for_device
+from repro.tune import routing
+
+__all__ = ["static_r1", "static_r2", "static_r6", "static_r7",
+           "gemv_vmem", "spmm_vmem"]
+
+
+def static_r1(program) -> list:
+    """Dense-fallback traces recorded by the dispatcher while this program
+    traced: a sparse layout was materialized for a reference dense op."""
+    diags = []
+    for (outcome, op, sig), count in sorted(program.fallbacks.items()):
+        if outcome != "dense_fallback":
+            continue
+        diags.append(Diagnostic(
+            rule="R1", severity=Severity.ERROR, entry=program.name,
+            message=f"dispatcher fell back to the dense implementation of "
+                    f"{op!r} for signature {list(sig)} ({count} trace(s)) "
+                    f"— the sparse operand was silently densified",
+            op=op, location="dispatch-counters",
+            fix=f"register a sparse implementation for ({op}, "
+                f"{list(sig)}) or convert the operand to a supported "
+                f"layout before the call",
+        ))
+    return diags
+
+
+def static_r2(program) -> list:
+    """Conversion churn: the same (layout -> layout, shape) conversion ran
+    more than once while tracing one program — each repeat re-materializes
+    and re-compresses the same weight."""
+    counts = collections.Counter(
+        (src, dst, shape) for src, dst, shape in program.conversions
+        if src != "DenseTensor"
+    )
+    diags = []
+    for (src, dst, shape), n in sorted(counts.items()):
+        if n <= 1:
+            continue
+        diags.append(Diagnostic(
+            rule="R2", severity=Severity.WARNING, entry=program.name,
+            message=f"{src} -> {dst} conversion of shape {list(shape)} ran "
+                    f"{n}x in one traced program — convert once and reuse "
+                    f"the converted layout",
+            op=f"{src}->{dst}", location="conversion-log",
+            fix="hoist the conversion out of the traced function (convert "
+                "at load/sparsify time, not per call)",
+        ))
+    return diags
+
+
+# ---------------------------------------------------------------------------
+# R6: routed-config VMEM working sets (mirrors the Pallas block shapes)
+# ---------------------------------------------------------------------------
+
+
+def _fmt_ctx(w, dtype) -> dict:
+    sd = w.sparse_dim % 2
+    return dict(K=int(w.dense_shape[sd]), R=int(w.dense_shape[1 - sd]),
+                fmt=(w.n, w.m, w.g), gr=w.gr, dtype=jnp.dtype(dtype))
+
+
+def gemv_vmem(w, dtype, M: int, device_kind: str, *, weight: str = "") -> dict:
+    """Per-grid-step VMEM bytes of the routed decode GEMV config: index
+    slab + value tile + gathered-B tile (CG*m x M_pad) + output tile +
+    f32 accumulator scratch (the ``nmg_gemv_pallas`` block shapes)."""
+    ctx = _fmt_ctx(w, dtype)
+    cfg, src = routing.gemv_pallas_config(**ctx)
+    n, m, g = ctx["fmt"]
+    gr = ctx["gr"]
+    cg = math.comb(m, n) * g
+    tm = int(cfg["tm"])
+    m_pad = M + (-M) % tm
+    vb = jnp.dtype(dtype).itemsize
+    nbytes = (cg * 4                      # SMEM pattern indices
+              + gr * cg * n * vb          # value tile
+              + cg * m * m_pad * vb       # gathered B tile
+              + gr * m_pad * vb           # output tile
+              + gr * m_pad * 4)           # f32 accumulator scratch
+    hw, _ = hw_for_device(device_kind)
+    return {"kernel": "nmg_gemv", "weight": weight, "config": dict(cfg),
+            "source": src, "M": int(M), "bytes": int(nbytes),
+            "budget": int(hw["vmem_bytes"]), "device": device_kind}
+
+
+def spmm_vmem(w, dtype, N: int, device_kind: str, *, weight: str = "") -> dict:
+    """Per-grid-step VMEM bytes of the routed prefill SpMM config.  The
+    streamed schedule keeps a full K_pad x tn B slab resident plus the
+    double-buffered value scratch; the grid schedule tiles B per chunk."""
+    ctx = _fmt_ctx(w, dtype)
+    cfg, src = routing.spmm_pallas_config(**ctx)
+    n, m, g = ctx["fmt"]
+    gr = ctx["gr"]
+    cg = math.comb(m, n) * g
+    tn = min(int(cfg["tn"]), N + (-N) % 128)
+    k_pad = ctx["K"] + (-ctx["K"]) % (m * g)
+    vb = jnp.dtype(dtype).itemsize
+    if cfg.get("stream", True):
+        nbytes = (k_pad * tn * vb           # resident B slab
+                  + 2 * gr * cg * n * vb    # double-buffered value scratch
+                  + gr * tn * 4)            # f32 output tile
+    else:
+        nbytes = (cg * m * tn * vb          # per-chunk B tile
+                  + gr * cg * n * vb        # value tile
+                  + gr * tn * 4)
+    hw, _ = hw_for_device(device_kind)
+    return {"kernel": "nmg_spmm", "weight": weight, "config": dict(cfg),
+            "source": src, "N": int(N), "bytes": int(nbytes),
+            "budget": int(hw["vmem_bytes"]), "device": device_kind}
+
+
+def static_r6(program) -> list:
+    """Routed Pallas working set exceeds the per-device VMEM budget."""
+    diags = []
+    for est in program.vmem_estimates:
+        if est["bytes"] <= est["budget"]:
+            continue
+        diags.append(Diagnostic(
+            rule="R6", severity=Severity.ERROR, entry=program.name,
+            message=f"routed {est['kernel']} config {est['config']} "
+                    f"(source: {est['source']}) for weight "
+                    f"{est['weight'] or '?'} needs "
+                    f"~{est['bytes'] / 2**20:.1f} MiB VMEM per grid step — "
+                    f"budget is {est['budget'] / 2**20:.0f} MiB on "
+                    f"{est['device']}",
+            op=est["kernel"], location="vmem-estimate",
+            fix="shrink the tuned tile (tm/tn/target_depth) for this shape "
+                "bucket, or regenerate the tuning table on this device",
+        ))
+    return diags
+
+
+def static_r7(program) -> list:
+    """Device kind with no modelled HW entry: roofline terms and VMEM
+    budgets silently fall back to the TPU v5e numbers (warning — the run
+    still works, the *model* is what's off)."""
+    _, matched = hw_for_device(program.device_kind)
+    if matched:
+        return []
+    return [Diagnostic(
+        rule="R7", severity=Severity.WARNING, entry=program.name,
+        message=f"device kind {program.device_kind!r} has no entry in "
+                f"HW_BY_KIND — VMEM budgets and roofline terms are "
+                f"modelled against the TPU v5e constants",
+        op=program.device_kind, location="hw-model",
+        fix="add this device kind to launch/hlo_analysis.HW_BY_KIND",
+    )]

@@ -22,7 +22,22 @@ from repro.core.layouts import (
     SparsityLayout,
 )
 
-__all__ = ["convert", "lossless_targets", "as_layout"]
+__all__ = ["convert", "lossless_targets", "as_layout", "conversion_log",
+           "reset_conversion_log"]
+
+#: every convert() that actually ran (short-circuits excluded), as
+#: (source layout name, target layout name, dense shape) — the static
+#: checker's R2 pass reads this to spot the same weight being converted
+#: repeatedly inside one traced program
+_CONVERSION_LOG: list = []
+
+
+def conversion_log() -> list:
+    return list(_CONVERSION_LOG)
+
+
+def reset_conversion_log() -> None:
+    _CONVERSION_LOG.clear()
 
 
 def as_layout(x) -> SparsityLayout:
@@ -57,6 +72,9 @@ def convert(x, target: type):
             f"no lossless conversion {type(x).__name__} -> {target.__name__}"
         )
     dense = x.to_dense()
+    _CONVERSION_LOG.append(
+        (type(x).__name__, target.__name__, tuple(map(int, dense.shape)))
+    )
     if target is DenseTensor:
         return DenseTensor(dense)
     if target is FixedMaskTensor:

@@ -58,6 +58,7 @@ __all__ = [
     "sparse_op_table",
     "dispatch_counters",
     "reset_dispatch_counters",
+    "predict_route",
     "set_conversion_cost_model",
     "conversion_cost_model",
 ]
@@ -91,8 +92,16 @@ def dispatch_counters() -> dict:
     return dict(_DISPATCH_COUNTS)
 
 
+#: (op, sig-names) pairs whose dense-fallback warning already fired — the
+#: counter above still increments per trace (that's the telemetry), but
+#: the *warning* fires once per process per signature so a scan-over-layers
+#: retrace doesn't emit n_layers identical lines
+_WARNED_FALLBACKS: set = set()
+
+
 def reset_dispatch_counters() -> None:
     _DISPATCH_COUNTS.clear()
+    _WARNED_FALLBACKS.clear()
 
 
 def _count_dispatch(outcome: str, op_name: str, sig: tuple) -> None:
@@ -297,12 +306,15 @@ def dispatch(op, *args, inline: Optional[Sparsifier] = None,
         # DenseTensor wrappers densify for free — only warn when a *sparse*
         # layout is about to be materialized
         _count_dispatch("dense_fallback", op_name, sig)
-        warnings.warn(
-            f"sten: falling back to dense implementation of {op_name!r} for "
-            f"signature {[c.__name__ for c in sig]}",
-            SparseFallbackWarning,
-            stacklevel=2,
-        )
+        warn_key = (op_name, tuple(c.__name__ for c in sig))
+        if warn_key not in _WARNED_FALLBACKS:
+            _WARNED_FALLBACKS.add(warn_key)
+            warnings.warn(
+                f"sten: falling back to dense implementation of {op_name!r} "
+                f"for signature {[c.__name__ for c in sig]}",
+                SparseFallbackWarning,
+                stacklevel=2,
+            )
     dense_args = tuple(
         a.to_dense() if isinstance(a, SparsityLayout) else a for a in args
     )
@@ -310,6 +322,48 @@ def dispatch(op, *args, inline: Optional[Sparsifier] = None,
     if inline is not None and not isinstance(inline, KeepAll):
         out = inline(out)
     return out
+
+
+def predict_route(op, sig, *, inline: type | None = None) -> dict:
+    """Predict, without calling anything, how :func:`dispatch` would route
+    ``op`` over a signature of layout classes (instances are accepted and
+    reduced to their classes).  Returns::
+
+        {"outcome": "impl" | "dense_fallback",
+         "op": name, "sig": (layout names...),
+         "target_sig": (layout names...) | None,   # conversions applied
+         "conversions": ((from, to), ...),
+         "warns": bool}                            # fallback would warn
+
+    This is the checker's static view of the dispatcher — the same
+    ``_find_impl`` lookup the runtime runs, with the counter side effects
+    snapshotted away so prediction never pollutes the telemetry."""
+    op_name = _canonical_name(op)
+    sig = tuple(
+        s if isinstance(s, type) else type(conv.as_layout(s)) for s in sig
+    )
+    saved = _DISPATCH_COUNTS.copy()
+    try:
+        impl, target_sig = _find_impl(op_name, sig, inline)
+        if impl is None and inline is not None:
+            impl, target_sig = _find_impl(op_name, sig, None)
+    finally:
+        _DISPATCH_COUNTS.clear()
+        _DISPATCH_COUNTS.update(saved)
+    names = tuple(c.__name__ for c in sig)
+    if impl is not None:
+        conversions = tuple(
+            (h.__name__, w.__name__)
+            for h, w in zip(sig, target_sig or sig) if h is not w
+        )
+        return {"outcome": "impl", "op": op_name, "sig": names,
+                "target_sig": tuple(c.__name__ for c in target_sig)
+                if target_sig else None,
+                "conversions": conversions, "warns": False}
+    warns = any(issubclass(c, SparsityLayout) and c is not DenseTensor
+                for c in sig)
+    return {"outcome": "dense_fallback", "op": op_name, "sig": names,
+            "target_sig": None, "conversions": (), "warns": warns}
 
 
 def _with_post_sparsifier(impl, sparsifier):

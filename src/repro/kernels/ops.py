@@ -77,6 +77,7 @@ __all__ = [
     "matmul_threshold",
     "kernel_counters",
     "reset_kernel_counters",
+    "predict_route",
 ]
 
 #: shipped-default decode width (single source of truth:
@@ -467,6 +468,93 @@ def nmg_linear(x: jnp.ndarray, w: GroupedNMTensor, *,
     _KERNEL_COUNTS[("nmg_linear", f"spmm[{src}]")] += 1
     yt = nmg_spmm(w, x2.T, use_pallas=use_pallas)  # f32 [N, M]
     return yt.astype(x.dtype).T.reshape(*lead, -1)
+
+
+# ---------------------------------------------------------------------------
+# static route prediction (the checker's differential surface)
+# ---------------------------------------------------------------------------
+
+
+def _predict_linear(w: GroupedNMTensor, M: int, dtype,
+                    use_pallas: bool) -> list:
+    """Counter keys :func:`nmg_linear` would record for this trace."""
+    thr, src = routing.decode_m_max(**_route_ctx(w, dtype))
+    if M <= thr:
+        return [("nmg_linear", f"gemv[{src}]"),
+                ("nmg_gemv", "pallas" if use_pallas else "xla")]
+    keys = [("nmg_linear", f"spmm[{src}]"),
+            ("nmg_spmm", "pallas" if use_pallas else "xla")]
+    if use_pallas:
+        cfg, csrc = routing.spmm_pallas_config(**_route_ctx(w, dtype))
+        sched = "stream" if cfg["stream"] else "grid"
+        keys.append(("nmg_spmm_pallas", f"{sched}[{csrc}]"))
+    return keys
+
+
+def predict_route(op: str, a=None, *, M: int, dtype, ws=None,
+                  act: str = "silu", use_pallas: bool | None = None) -> list:
+    """Predict, without tracing anything, the ``kernel_counters`` keys one
+    trace of ``op`` would record — the same routing lookups the runtime
+    branches run, in the same order.  ``repro.check --differential``
+    cross-checks these predictions against the counters a real engine
+    warmup records; a mismatch means this mirror (or the router) drifted.
+
+    ``op`` is the layout-level op name: ``"nmg_linear"`` / ``"nmg_matmul"``
+    (plain projection of an [*, K] activation with ``M`` total rows),
+    ``"mm_gated"`` (the model's gated-MLP entry, which may fuse), or
+    ``"mm_fused_qkv"`` (projection group ``ws``).  Lookups read the active
+    tuning table exactly as the runtime would, so predictions are
+    table-sensitive — predict under the same table you serve under."""
+    if use_pallas is None:
+        use_pallas = on_tpu()
+
+    if op in ("nmg_linear", "nmg_matmul"):
+        keys = _predict_linear(a, M, dtype, use_pallas)
+        if op == "nmg_matmul":
+            thr, src = routing.decode_m_max(**_route_ctx(a, dtype))
+            path = "gemv" if M <= thr else "spmm"
+            keys = [("nmg_matmul", f"{path}[{src}]")] + [
+                k for k in keys if k[0] != "nmg_linear"
+            ]
+        return keys
+
+    if op == "mm_gated":
+        if not isinstance(a, GroupedNMTensor):
+            return []                          # dense weight: reference path
+        sd = a.sparse_dim % 2
+        R = a.dense_shape[1 - sd]
+        ctx = _route_ctx(a, dtype)
+        thr, _ = routing.decode_m_max(**ctx)
+        eligible = R % 2 == 0 and fusable_ffn(a, R // 2)
+        if not eligible or M > thr:
+            return _predict_linear(a, M, dtype, use_pallas)
+        fuse, src = routing.fused_ffn(**ctx)
+        if fuse:
+            return [("nmg_ffn", f"fused[{src}]"),
+                    ("nmg_ffn", "pallas" if use_pallas else "xla")]
+        return [("nmg_ffn", f"sequential[{src}]")] + _predict_linear(
+            a, M, dtype, use_pallas
+        )
+
+    if op == "mm_fused_qkv":
+        ws = tuple(ws if ws is not None else a)
+        if not fusable_qkv(ws):
+            return [k for w in ws
+                    for k in _predict_linear(w, M, dtype, use_pallas)]
+        ctx = _fused_ctx(ws, dtype)
+        thr, _ = routing.decode_m_max(**ctx)
+        if M > thr:
+            return [k for w in ws
+                    for k in _predict_linear(w, M, dtype, use_pallas)]
+        fuse, src = routing.fused_qkv(**ctx)
+        if fuse:
+            return [("nmg_qkv", f"fused[{src}]"),
+                    ("nmg_qkv", "pallas" if use_pallas else "xla")]
+        return [("nmg_qkv", f"sequential[{src}]")] + [
+            k for w in ws for k in _predict_linear(w, M, dtype, use_pallas)
+        ]
+
+    raise ValueError(f"predict_route: unknown op {op!r}")
 
 
 # ---------------------------------------------------------------------------

@@ -32,14 +32,42 @@ import dataclasses
 import re
 from typing import Dict
 
-__all__ = ["collective_bytes", "analyze_hlo", "roofline_terms", "HW"]
+__all__ = ["collective_bytes", "analyze_hlo", "roofline_terms", "HW",
+           "HW_BY_KIND", "DEFAULT_HW_KIND", "hw_for_device",
+           "parse_module", "inst_operands"]
 
-#: TPU v5e per-chip constants (assignment-provided)
-HW = {
-    "peak_flops_bf16": 197e12,   # FLOP/s
-    "hbm_bw": 819e9,             # B/s
-    "ici_bw": 50e9,              # B/s per link
+#: per-chip constants keyed by ``tune.table.device_kind()`` spelling —
+#: TPU v5e numbers are assignment-provided; the cpu entry is a rough
+#: host-class model so CI runs don't trip the unmodelled-device warning
+HW_BY_KIND = {
+    "tpu:tpu_v5e": {
+        "peak_flops_bf16": 197e12,   # FLOP/s
+        "hbm_bw": 819e9,             # B/s
+        "ici_bw": 50e9,              # B/s per link
+        "vmem_bytes": 128 * 2**20,   # per-core VMEM budget
+    },
+    "cpu:cpu": {
+        "peak_flops_bf16": 2e12,
+        "hbm_bw": 100e9,
+        "ici_bw": 50e9,
+        "vmem_bytes": 128 * 2**20,   # interpret mode models the v5e budget
+    },
 }
+
+DEFAULT_HW_KIND = "tpu:tpu_v5e"
+
+#: the historical module-level constant — still the v5e entry, so every
+#: existing roofline/benchmark import keeps its exact numbers
+HW = HW_BY_KIND[DEFAULT_HW_KIND]
+
+
+def hw_for_device(kind: str | None = None):
+    """-> (hw constants dict, matched: bool).  Unknown/None kinds fall
+    back to the TPU v5e entry with ``matched=False`` — the checker turns
+    that into the R7 warning rather than guessing numbers."""
+    if kind in HW_BY_KIND:
+        return HW_BY_KIND[kind], True
+    return HW_BY_KIND[DEFAULT_HW_KIND], False
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
@@ -445,9 +473,16 @@ class RooflineTerms:
 
 
 def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
-                   coll_bytes_per_dev: float) -> RooflineTerms:
+                   coll_bytes_per_dev: float,
+                   device_kind: str | None = None) -> RooflineTerms:
+    hw = HW if device_kind is None else hw_for_device(device_kind)[0]
     return RooflineTerms(
-        compute_s=flops_per_dev / HW["peak_flops_bf16"],
-        memory_s=bytes_per_dev / HW["hbm_bw"],
-        collective_s=coll_bytes_per_dev / HW["ici_bw"],
+        compute_s=flops_per_dev / hw["peak_flops_bf16"],
+        memory_s=bytes_per_dev / hw["hbm_bw"],
+        collective_s=coll_bytes_per_dev / hw["ici_bw"],
     )
+
+
+# public parser surface for repro.check's HLO pass
+parse_module = _parse_module
+inst_operands = _operands

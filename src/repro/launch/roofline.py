@@ -18,7 +18,8 @@ import argparse
 import json
 import pathlib
 
-from repro.launch.hlo_analysis import HW
+from repro.launch.hlo_analysis import DEFAULT_HW_KIND, HW_BY_KIND, \
+    hw_for_device
 
 
 def fmt_s(x):
@@ -122,10 +123,20 @@ def main():
     ap.add_argument("--bench", default=None,
                     help="BENCH_bench.json to render the kernel-roofline "
                          "section from (fig6 megakernel records)")
+    ap.add_argument("--device-kind", default=DEFAULT_HW_KIND,
+                    help="HW constants to model against (keys of "
+                         f"launch.hlo_analysis.HW_BY_KIND: "
+                         f"{', '.join(sorted(HW_BY_KIND))})")
     args = ap.parse_args()
     recs = load(args.dir, args.mesh, args.tag)
-    print(f"hardware: {HW['peak_flops_bf16']/1e12:.0f} TF/s bf16, "
-          f"{HW['hbm_bw']/1e9:.0f} GB/s HBM, {HW['ici_bw']/1e9:.0f} GB/s ICI"
+    hw, matched = hw_for_device(args.device_kind)
+    kind = args.device_kind if matched else DEFAULT_HW_KIND
+    if not matched:
+        print(f"warning: device kind {args.device_kind!r} has no "
+              f"HW_BY_KIND entry — modelling against {DEFAULT_HW_KIND} "
+              f"(the repro.check R7 diagnostic flags this too)")
+    print(f"hardware ({kind}): {hw['peak_flops_bf16']/1e12:.0f} TF/s bf16, "
+          f"{hw['hbm_bw']/1e9:.0f} GB/s HBM, {hw['ici_bw']/1e9:.0f} GB/s ICI"
           " per chip\n")
     print(table(recs))
     if args.bench:

@@ -173,6 +173,10 @@ def main(argv=None):
     ap.add_argument("--tune", action="store_true",
                     help="--engine mode: autotune the served shapes "
                          "during warmup (repro.tune warmup hook)")
+    ap.add_argument("--check", action="store_true",
+                    help="run the repro.check static verifier over the "
+                         "serve entry before doing anything; abort on "
+                         "ERROR diagnostics")
     args = ap.parse_args(argv)
     if args.paged and not args.engine:
         ap.error("--paged requires --engine (the one-shot path has no "
@@ -190,6 +194,16 @@ def main(argv=None):
     from repro.tune import load_table_cli
 
     load_table_cli(args.tuning_table)  # --tuning-table or $REPRO_TUNE_TABLE
+
+    if args.check:
+        # after the table load on purpose: routed-config diagnostics (R6)
+        # must judge the same table the run is about to serve under
+        from repro.check import preflight
+
+        rc = preflight(("serve",), arch=args.arch)
+        if rc:
+            print("repro.check: serve preflight failed — not serving")
+            return rc
 
     cfg = get_smoke(args.arch) if args.smoke else get_arch(args.arch)
     key = jax.random.PRNGKey(args.seed)

@@ -193,6 +193,10 @@ def main(argv=None):
                          "`python -m repro.tune`) before the step "
                          "compiles, so sparse kernel routing uses "
                          "measured decisions instead of shipped defaults")
+    ap.add_argument("--check", action="store_true",
+                    help="run the repro.check static verifier over the "
+                         "train entry before the first step compiles; "
+                         "abort on ERROR diagnostics")
     args = ap.parse_args(argv)
     # the fast path chunks by --log-every; a non-positive value would spin
     # on zero-step chunks forever (and 0 was a ZeroDivisionError before)
@@ -202,6 +206,16 @@ def main(argv=None):
     from repro.tune import load_table_cli
 
     load_table_cli(args.tuning_table)  # --tuning-table or $REPRO_TUNE_TABLE
+
+    if args.check:
+        # after the table load on purpose: routed-config diagnostics (R6)
+        # must judge the same table the run is about to train under
+        from repro.check import preflight
+
+        rc = preflight(("train",), arch=args.arch)
+        if rc:
+            print("repro.check: train preflight failed — not training")
+            return rc
 
     cfg = get_smoke(args.arch) if args.smoke else get_arch(args.arch)
     key = jax.random.PRNGKey(args.seed)

@@ -40,7 +40,7 @@ import numpy as np
 from repro.core.builder import SparsityBuilder
 from repro.core.layouts import GroupedNMTensor
 from repro.core.sparsifiers import GroupedNMSparsifier
-from repro.models import decode_step
+from repro.models import decode_step, init_cache, prefill
 from repro.models.common import ModelConfig
 from repro.serve.cache import PagedKVCache, PromptTooLongError, \
     SlotKVCache, paged_commit, paged_view
@@ -49,7 +49,7 @@ from repro.serve.queue import Request, RequestOutput, RequestQueue, \
     sample_token
 
 __all__ = ["ServeEngine", "sparsify_for_serving", "compare_dense_sparse",
-           "warmup_engine"]
+           "warmup_engine", "serve_programs"]
 
 
 #: bound on the per-config jitted-closure caches below.  Each entry pins a
@@ -67,26 +67,20 @@ _JIT_CACHE_SIZE = 16
 DEFAULT_MAX_SLOTS = 8
 
 
-@functools.lru_cache(maxsize=_JIT_CACHE_SIZE)
-def _jit_decode(cfg: ModelConfig):
-    """One jitted decode step per config (ModelConfig is frozen/hashable),
-    shared across engine instances so a dense-vs-sparse comparison only
-    compiles each (config, param-structure) once.  The cache operand is
-    donated — the hot path updates the KV pool in place every token
-    instead of copying it."""
-    return jax.jit(
-        lambda p, tok, cache, pos: decode_step(p, cfg, tok, cache, pos),
-        donate_argnums=(2,),
-    )
+def _decode_fn(cfg: ModelConfig):
+    """The raw (unjitted) per-token decode callable the engine compiles.
+    Split out of :func:`_jit_decode` so ``repro.check`` can trace the
+    *identical* program the runtime jits."""
+
+    def step(p, tok, cache, pos):
+        return decode_step(p, cfg, tok, cache, pos)
+
+    return step
 
 
-@functools.lru_cache(maxsize=2 * _JIT_CACHE_SIZE)  # keyed (cfg, n_steps)
-def _jit_decode_chunk(cfg: ModelConfig, n_steps: int):
-    """Jitted multi-token inner decode loop (the serving analogue of
-    ``launch/train.py:make_multi_step``): ``n_steps`` decode steps under one
-    ``lax.scan`` with on-device greedy sampling, so the host syncs once per
-    chunk instead of once per token.  Returns the [n_steps, max_slots]
-    token matrix (the single chunked host fetch) plus the updated cache."""
+def _decode_chunk_fn(cfg: ModelConfig, n_steps: int):
+    """The raw chunked decode loop body (see :func:`_jit_decode_chunk`),
+    split out for the same reason as :func:`_decode_fn`."""
 
     def chunk(p, tok, cache, pos):
         def body(carry, _):
@@ -100,7 +94,53 @@ def _jit_decode_chunk(cfg: ModelConfig, n_steps: int):
         )
         return toks, cache
 
-    return jax.jit(chunk, donate_argnums=(2,))
+    return chunk
+
+
+@functools.lru_cache(maxsize=_JIT_CACHE_SIZE)
+def _jit_decode(cfg: ModelConfig):
+    """One jitted decode step per config (ModelConfig is frozen/hashable),
+    shared across engine instances so a dense-vs-sparse comparison only
+    compiles each (config, param-structure) once.  The cache operand is
+    donated — the hot path updates the KV pool in place every token
+    instead of copying it."""
+    return jax.jit(_decode_fn(cfg), donate_argnums=(2,))
+
+
+@functools.lru_cache(maxsize=2 * _JIT_CACHE_SIZE)  # keyed (cfg, n_steps)
+def _jit_decode_chunk(cfg: ModelConfig, n_steps: int):
+    """Jitted multi-token inner decode loop (the serving analogue of
+    ``launch/train.py:make_multi_step``): ``n_steps`` decode steps under one
+    ``lax.scan`` with on-device greedy sampling, so the host syncs once per
+    chunk instead of once per token.  Returns the [n_steps, max_slots]
+    token matrix (the single chunked host fetch) plus the updated cache."""
+    return jax.jit(_decode_chunk_fn(cfg, n_steps), donate_argnums=(2,))
+
+
+def serve_programs(params, cfg: ModelConfig, *, max_slots: int = 4,
+                   max_seq_len: int = 64, decode_chunk: int = 4,
+                   prompt_len: int = 8) -> dict:
+    """The engine's compiled surface as ``{name: (fn, example_args)}`` —
+    the exact callables :func:`_jit_decode` / :func:`_jit_decode_chunk` /
+    the admission prefill jit, with example arguments shaped the way a
+    running engine shapes them.  ``repro.check`` traces these, so a
+    diagnostic on a ``serve:*`` program is a diagnostic on the real
+    serving fast path, not on a checker-only approximation."""
+    tok = jnp.zeros((max_slots, 1), jnp.int32)
+    cache = init_cache(cfg, max_slots, max_seq_len)
+    pos = jnp.full((max_slots,), prompt_len, jnp.int32)
+    progs = {
+        "decode": (_decode_fn(cfg), (params, tok, cache, pos)),
+        "prefill": (
+            lambda p, toks: prefill(p, cfg, toks, cache_len=max_seq_len),
+            (params, jnp.zeros((1, prompt_len), jnp.int32)),
+        ),
+    }
+    if decode_chunk > 1:
+        progs["decode_chunk"] = (
+            _decode_chunk_fn(cfg, decode_chunk), (params, tok, cache, pos),
+        )
+    return progs
 
 
 @functools.lru_cache(maxsize=_JIT_CACHE_SIZE)

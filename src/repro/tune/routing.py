@@ -35,8 +35,10 @@ exists precisely to tune-then-compile in the right order.
 
 from __future__ import annotations
 
+import collections
 import os
 import sys
+import warnings
 from typing import Optional
 
 from repro.tune.table import TuningTable, shape_key
@@ -54,6 +56,7 @@ __all__ = [
     "clear_active_table",
     "load_table",
     "load_table_cli",
+    "table_load_events",
     "decode_m_max",
     "spmm_block_elems",
     "gemv_pallas_config",
@@ -115,9 +118,38 @@ def clear_active_table() -> None:
     set_active_table(None)
 
 
-def load_table(path: str) -> TuningTable:
-    """Load ``path``'s section for the running device and make it active."""
-    table = TuningTable.load(path)
+# table-load provenance: ("table", "loaded" | "load_failed") -> count.
+# Deliberately *not* reset with the routing counters — a corrupt table that
+# was ever swallowed in this process stays visible to the checker and to
+# post-mortem debugging even after the run fell back to defaults.
+_LOAD_EVENTS: collections.Counter = collections.Counter()
+
+
+def table_load_events() -> dict:
+    """{("table", "loaded" | "load_failed"): count} for this process."""
+    return dict(_LOAD_EVENTS)
+
+
+def load_table(path: str) -> Optional[TuningTable]:
+    """Load ``path``'s section for the running device and make it active.
+
+    A corrupt, truncated, or schema-mismatched file is *not* fatal: it
+    warns (``RuntimeWarning``), records a ``("table", "load_failed")``
+    provenance event, leaves whatever table was previously active
+    untouched, and returns None — the run proceeds on shipped defaults
+    rather than dying because an optional optimization artifact rotted."""
+    try:
+        table = TuningTable.load(path)
+    except (OSError, ValueError) as e:
+        _LOAD_EVENTS[("table", "load_failed")] += 1
+        warnings.warn(
+            f"tuning table {path!r} failed to load ({e}) — routing falls "
+            f"back to shipped defaults",
+            RuntimeWarning,
+            stacklevel=2,
+        )
+        return None
+    _LOAD_EVENTS[("table", "loaded")] += 1
     set_active_table(table)
     return table
 
@@ -131,23 +163,33 @@ def load_table_cli(path: Optional[str], *, verbose: bool = True
     message exists to surface.  Returns None when neither source names a
     (readable) table."""
     if path:
-        table, src = load_table(path), path
+        # the user explicitly asked for this table: a load failure is an
+        # error, not a fall-back (silently running untuned would defeat
+        # the point of passing --tuning-table)
+        table = load_table(path)
+        if table is None:
+            raise ValueError(
+                f"tuning table {path!r} failed to load (see warning above)"
+            )
+        src = path
     else:
         env = os.environ.get(ENV_TABLE)
         if not env:
             return None
-        # an explicit --tuning-table problem raises; the env spelling
-        # must not crash unrelated commands, but going quiet would leave
-        # the user believing the run was tuned — so warn on a missing,
-        # stale-schema, or corrupt env table and fall back to defaults
+        # the env spelling must not crash unrelated commands, but going
+        # quiet would leave the user believing the run was tuned — so warn
+        # on a missing, stale-schema, or corrupt env table and fall back
+        # to defaults
         if not os.path.exists(env):
             print(f"tuning: ${ENV_TABLE}={env} does not exist — "
                   f"using shipped defaults", file=sys.stderr)
             return None
-        try:
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
             table = load_table(env)
-        except (OSError, ValueError) as e:
-            print(f"tuning: ${ENV_TABLE}={env} is unreadable ({e}) — "
+        if table is None:
+            msg = str(caught[-1].message) if caught else "load failed"
+            print(f"tuning: ${ENV_TABLE}={env} is unreadable ({msg}) — "
                   f"using shipped defaults", file=sys.stderr)
             return None
         src = f"${ENV_TABLE}={env}"

@@ -17,16 +17,18 @@ import pytest
 _disp = importlib.import_module("repro.core.dispatch")
 _kops = importlib.import_module("repro.kernels.ops")
 _routing = importlib.import_module("repro.tune.routing")
+_conv = importlib.import_module("repro.core.convert")
 
 
 @pytest.fixture(autouse=True)
 def _reset_routing_state():
     """Counter/table hygiene: every test starts with empty dispatch and
-    kernel counters and no active tuning table, so a test asserting exact
-    counts (or default routing) can never be poisoned by whatever traced
-    before it — see tests/test_counter_hygiene.py for the regression
-    pinning this."""
+    kernel counters, an empty conversion log, and no active tuning table,
+    so a test asserting exact counts (or default routing) can never be
+    poisoned by whatever traced before it — see
+    tests/test_counter_hygiene.py for the regression pinning this."""
     _disp.reset_dispatch_counters()
     _kops.reset_kernel_counters()
     _routing.clear_active_table()
+    _conv.reset_conversion_log()
     yield

@@ -1,0 +1,98 @@
+"""Meta-tests keeping the checker honest: the rule registry and the
+fixture table stay in lockstep, and every Pallas kernel test carries the
+``pallas_interpret`` marker (the dedicated CI job selects on it, so an
+unmarked kernel test silently drops out of that job)."""
+
+import ast
+import pathlib
+
+from repro.check.fixtures import FIXTURES
+from repro.check.rules import all_rules
+
+TESTS_DIR = pathlib.Path(__file__).parent
+
+
+# ---------------------------------------------------------------------------
+# rule <-> fixture lockstep
+# ---------------------------------------------------------------------------
+
+
+def test_every_rule_has_trigger_and_clean_fixture():
+    missing = {
+        rid for rid in all_rules()
+        if rid not in FIXTURES
+        or not callable(FIXTURES[rid].get("trigger"))
+        or not callable(FIXTURES[rid].get("clean"))
+    }
+    assert not missing, (
+        f"rules without a trigger+clean fixture pair: {sorted(missing)} — "
+        f"add them to repro.check.fixtures so the rule cannot land untested"
+    )
+
+
+def test_every_fixture_names_a_registered_rule():
+    stale = set(FIXTURES) - set(all_rules())
+    assert not stale, f"fixtures for unregistered rules: {sorted(stale)}"
+
+
+def test_rule_metadata_is_complete():
+    for rid, rule in all_rules().items():
+        assert rule.rule_id == rid
+        assert rule.name and rule.description
+        assert rule.detectors, f"{rid} has no detector functions"
+
+
+# ---------------------------------------------------------------------------
+# pallas_interpret marker hygiene
+# ---------------------------------------------------------------------------
+
+
+def _is_pallas_call(node: ast.Call) -> bool:
+    """A direct call to a ``*_pallas`` kernel, or any call passing a
+    literal ``use_pallas=True`` (the interpret-mode router override).
+    Config lookups like ``gemv_pallas_config`` do not end with ``_pallas``
+    and are deliberately not counted — they don't run a kernel."""
+    fn = node.func
+    name = fn.attr if isinstance(fn, ast.Attribute) else (
+        fn.id if isinstance(fn, ast.Name) else ""
+    )
+    if name.endswith("_pallas"):
+        return True
+    return any(
+        kw.arg == "use_pallas"
+        and isinstance(kw.value, ast.Constant) and kw.value.value is True
+        for kw in node.keywords
+    )
+
+
+def _has_marker(fn_def: ast.FunctionDef, module: ast.Module) -> bool:
+    for deco in fn_def.decorator_list:
+        if "pallas_interpret" in ast.dump(deco):
+            return True
+    for stmt in module.body:     # module-level pytestmark also counts
+        if (isinstance(stmt, ast.Assign)
+                and any(isinstance(t, ast.Name) and t.id == "pytestmark"
+                        for t in stmt.targets)
+                and "pallas_interpret" in ast.dump(stmt.value)):
+            return True
+    return False
+
+
+def test_pallas_kernel_tests_carry_interpret_marker():
+    offenders = []
+    for path in sorted(TESTS_DIR.glob("test_*.py")):
+        module = ast.parse(path.read_text())
+        for node in module.body:
+            if not isinstance(node, ast.FunctionDef) \
+                    or not node.name.startswith("test_"):
+                continue
+            runs_pallas = any(
+                isinstance(sub, ast.Call) and _is_pallas_call(sub)
+                for sub in ast.walk(node)
+            )
+            if runs_pallas and not _has_marker(node, module):
+                offenders.append(f"{path.name}::{node.name}")
+    assert not offenders, (
+        "Pallas kernel tests missing @pytest.mark.pallas_interpret "
+        f"(the dedicated CI job selects on it): {offenders}"
+    )

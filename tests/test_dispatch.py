@@ -231,3 +231,31 @@ def test_dense_tensor_wrappers_do_not_warn_on_fallback():
 def test_find_impl_prefers_fewest_conversions():
     impl, sig = _find_impl("matmul", (CsrTensor, DenseTensor), None)
     assert impl is not None and sig is None  # exact match, no conversion
+
+
+def test_fallback_warning_dedupes_per_signature():
+    """The dense-fallback *warning* fires once per (op, signature) per
+    process — a scan-over-layers model that falls back retraces the same
+    signature n_layers times and must not emit n_layers identical lines —
+    while the counter keeps counting every trace (the telemetry half)."""
+    import importlib
+
+    disp = importlib.import_module("repro.core.dispatch")
+    a = sparse(jax.random.normal(KEY, (4, 4)))
+    with pytest.warns(SparseFallbackWarning):
+        sten.relu(a)
+    # same (op, sig) again: counted, not re-warned
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", SparseFallbackWarning)
+        sten.relu(a)
+    counts = disp.dispatch_counters()
+    key = ("dense_fallback", "relu", ("CsrTensor",))
+    assert counts.get(key) == 2
+    # a different signature still warns fresh
+    with pytest.warns(SparseFallbackWarning):
+        sten.relu(CooTensor.from_dense(jax.random.normal(KEY, (4, 4))))
+    # and the conftest reset (reset_dispatch_counters) re-arms the dedupe,
+    # so pytest.warns-based tests stay order-independent
+    disp.reset_dispatch_counters()
+    with pytest.warns(SparseFallbackWarning):
+        sten.relu(a)

@@ -161,6 +161,7 @@ def test_tuned_spmm_block_bitwise_equals_default():
     np.testing.assert_array_equal(np.asarray(kops.nmg_spmm_xla(t, b)), want)
 
 
+@pytest.mark.pallas_interpret
 def test_gemv_pallas_config_sweep_exactness():
     """Pallas gemv tile configs drop or duplicate no values: on
     exact-arithmetic (small-integer) inputs every (tm, target_depth)
@@ -501,3 +502,34 @@ def test_warmup_hook_tunes_engine_shapes():
 
     # tuned serving == default-routing serving, token for token
     assert serve_once(3) == want
+
+
+def test_corrupt_table_load_is_robust(tmp_path):
+    """A truncated/corrupt table file must not kill the run: load_table
+    warns, records ("table", "load_failed") provenance, leaves the active
+    table untouched, and the process continues on shipped defaults."""
+    good = tmp_path / "good.json"
+    TuningTable(device=TuningTable.for_device().device,
+                entries={"decode_m_max": 5}).save(str(good))
+    tab = routing.load_table(str(good))
+    assert tab is not None and routing.active_table() is tab
+    before = routing.table_load_events()
+
+    truncated = tmp_path / "trunc.json"
+    truncated.write_text(good.read_text()[: len(good.read_text()) // 2])
+    with pytest.warns(RuntimeWarning, match="shipped defaults"):
+        assert routing.load_table(str(truncated)) is None
+    # the previously-active table survives a failed load
+    assert routing.active_table() is tab
+    events = routing.table_load_events()
+    assert events.get(("table", "load_failed"), 0) == \
+        before.get(("table", "load_failed"), 0) + 1
+
+    # routing still answers (from the surviving table)
+    thr, src = routing.decode_m_max(K=96, R=8, fmt=(1, 4, 4), gr=2,
+                                    dtype=jnp.float32)
+    assert (thr, src) == (5, "table")
+
+    # an explicit --tuning-table pointing at the corrupt file is an error
+    with pytest.raises(ValueError):
+        routing.load_table_cli(str(truncated), verbose=False)
