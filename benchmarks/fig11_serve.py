@@ -65,9 +65,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke
+from repro.ioutil import atomic_write_json
 from repro.models import init_lm
-from repro.serve import Request, SamplingParams, ServeEngine, \
-    compare_dense_sparse, sparsify_for_serving
+from repro.serve import FaultConfig, FaultInjector, Request, \
+    SamplingParams, ServeEngine, SLOConfig, burst_arrivals, \
+    compare_dense_sparse, sparsify_for_serving, trace_events
 
 disp = importlib.import_module("repro.core.dispatch")
 kops = importlib.import_module("repro.kernels.ops")
@@ -194,6 +196,19 @@ def shared_prefix_requests(cfg, *, n, prompt_len, shared_len, gen_len,
     return reqs
 
 
+def steady_tpot_p99(outs):
+    """Time-per-output-token p99 in steady state: each stream's *first*
+    inter-token gap spans the whole admission wave (co-arriving prefills)
+    — that is scheduling latency, reported separately as TTFT — so it is
+    excluded here, identically for every engine.  Unserved outputs
+    (shed/timeout/rejected) carry no token times and contribute nothing."""
+    gaps = []
+    for o in outs:
+        ts = o.token_times
+        gaps.extend(b - a for a, b in zip(ts[1:-1], ts[2:]))
+    return float(np.percentile(gaps, 99)) if gaps else float("nan")
+
+
 def paged_main(quick=False, out_json=OUT_JSON, shared_prefix_frac=0.97):
     """--paged mode: slot-cache baseline vs paged engines at equal KV
     memory and growing concurrency; see the module docstring."""
@@ -223,17 +238,6 @@ def paged_main(quick=False, out_json=OUT_JSON, shared_prefix_frac=0.97):
         # jitted closures are shared, so the measured engine never compiles
         ServeEngine(params, cfg, max_seq_len=max_seq, decode_chunk=gen_len,
                     **ekw).run(reqs[:2])
-
-    def steady_tpot_p99(outs):
-        # Time-per-output-token in steady state: each stream's *first*
-        # inter-token gap spans the whole admission wave (co-arriving
-        # prefills) — that is scheduling latency, reported separately as
-        # TTFT — so it is excluded here, identically for every engine.
-        gaps = []
-        for o in outs:
-            ts = o.token_times
-            gaps.extend(b - a for a, b in zip(ts[1:-1], ts[2:]))
-        return float(np.percentile(gaps, 99)) if gaps else float("nan")
 
     warm(max_slots=base_slots)
     slot_eng = ServeEngine(params, cfg, max_slots=base_slots,
@@ -333,13 +337,258 @@ def paged_main(quick=False, out_json=OUT_JSON, shared_prefix_frac=0.97):
     except (FileNotFoundError, json.JSONDecodeError):
         payload = {"benchmark": "fig11_serve"}
     payload["paged"] = section
-    with open(out_json, "w") as f:
-        json.dump(payload, f, indent=2)
+    atomic_write_json(out_json, payload)
     print(f"sustainable_slots: {section['sustainable_slots']} "
           f"({section['concurrency_multiplier_vs_slot']:.0f}x slot cache "
           f"at equal KV memory, p99 ratio "
           f"{section['p99_ratio_at_sustainable']:.2f})")
     print(f"wrote {out_json}")
+
+
+def slo_requests(cfg, *, arrivals, prompt_lens, gen_lens, priorities,
+                 deadline_s, seed=0):
+    """Bursty overload trace: one request per arrival time, prompt/gen
+    lengths and priorities cycled by index.  Most requests share the
+    short gen length; every fourth is a *long-runner* that stays resident
+    across several admission waves — the stream whose mid-flight token
+    gaps expose what each admission policy costs the already-running
+    work."""
+    key = jax.random.PRNGKey(seed)
+    reqs = []
+    for i, t in enumerate(arrivals):
+        plen = prompt_lens[i % len(prompt_lens)]
+        prompt = np.asarray(jax.random.randint(
+            jax.random.fold_in(key, i), (plen,), 0, cfg.vocab, jnp.int32))
+        reqs.append(Request(
+            uid=i, prompt=prompt,
+            max_new_tokens=gen_lens[i % len(gen_lens)],
+            sampling=SamplingParams(greedy=True, seed=i),
+            arrival_time=float(t),
+            priority=priorities[i % len(priorities)],
+            deadline_s=deadline_s,
+        ))
+    return reqs
+
+
+def _warm_plain(params, cfg, *, plens, chunk, ekw):
+    """Compile the plain engine's programs (per-plen prefill, decode,
+    chunk) via a throwaway engine sharing the module-level jit caches."""
+    reqs = [Request(uid=-1 - i, prompt=np.arange(1, p + 1) % 7 + 1,
+                    max_new_tokens=chunk + 1,
+                    sampling=SamplingParams(greedy=True, seed=i))
+            for i, p in enumerate(sorted(set(plens)))]
+    ServeEngine(params, cfg, decode_chunk=chunk, **ekw).run(reqs)
+
+
+def slo_main(quick=False, out_json=OUT_JSON, faults=True):
+    """--bursty mode: SLO-controlled engine (adaptive sparsity tiers,
+    deferred admissions, load shedding) vs the uncontrolled engine under
+    the *same* bursty arrival trace and (with --faults) the same seeded
+    fault schedule.
+
+    The SLO itself is calibrated on this host: a healthy run (gentle
+    Poisson arrivals, no faults, dense weights) measures the steady-state
+    TPOT p99 the hardware delivers when never overloaded, and the SLO is
+    ``SLO_MARGIN`` times that.  The gates then assert the paper's
+    overload story end-to-end:
+
+    * controlled steady-state TPOT p99 <= SLO,
+    * controlled shed-rate < ``SHED_RATE_MAX``,
+    * uncontrolled steady-state TPOT p99 >= ``UNCTRL_FACTOR`` * SLO,
+    * zero recompiles after ``warm_tiers`` (tier switches and chunk
+      shrinks are pointer swaps into already-compiled executables).
+
+    The contrast mechanism on this single-core host: an admission
+    prefill stalls every resident stream, so the uncontrolled engine's
+    back-to-back admission waves (every free slot refilled at once, at
+    dense prefill cost) inject multi-prefill gaps into the long-runners'
+    token cadence, while the controlled engine rations admissions to one
+    per step, switches to the cheaper sparse tier, and sheds the queue
+    tail instead of paying for it."""
+    SLO_MARGIN = 1.5       # SLO = margin * healthy steady p99
+    UNCTRL_FACTOR = 2.0    # uncontrolled must exceed this * SLO
+    SHED_RATE_MAX = 0.20
+
+    cfg = serving_cfg()
+    max_slots = 6
+    base_chunk = 8
+    prompt_lens = (16, 12, 8) if quick else (32, 24, 16)
+    gen_short = 12 if quick else 16
+    gen_long = 4 * gen_short
+    # a rare long-runner among cohorts of shorts: the cohort finishes
+    # together, so the uncontrolled engine refills its slots in one wave
+    # while a long-runner is mid-stream — the gap the controlled engine's
+    # admission rationing avoids.  Longs are kept rare (1 in 9) so they
+    # do not accumulate into the slots and narrow the waves.
+    gen_lens = (gen_short,) * 8 + (gen_long,)
+    max_seq = max(prompt_lens) + gen_long
+    n_bg = 8 if quick else 16
+    burst_size = 14 if quick else 20
+    arrivals = burst_arrivals(
+        n_background=n_bg, rate_hz=20.0,
+        bursts=((0.05, burst_size), (1.5, burst_size)), seed=7)
+    n_total = len(arrivals)
+    # uniform priority: admission order then stays FIFO, so the 4:2
+    # cohort cycle survives into the slots (mixed priorities reorder the
+    # queue and destagger the cohorts; priority-typed shedding is
+    # exercised by the unit and fault-storm tests)
+    reqs = slo_requests(cfg, arrivals=arrivals, prompt_lens=prompt_lens,
+                        gen_lens=gen_lens, priorities=(0,),
+                        deadline_s=120.0)
+
+    tier_specs = ["dense", f"{':'.join(map(str, NM))}-gr{GR}"]
+    fcfg = FaultConfig(
+        seed=11, horizon=4096,
+        spike_prob=0.03 if faults else 0.0, spike_s=(0.002, 0.008),
+        slow_windows=((24, 60, 4.0),) if faults else (),
+        error_prob=0.04 if faults else 0.0, max_consecutive_errors=2,
+        admission_delay_s=0.03 if faults else 0.0,
+    )
+
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    disp.reset_dispatch_counters()
+    kops.reset_kernel_counters()
+    ekw = dict(max_slots=max_slots, max_seq_len=max_seq)
+
+    # -- calibration: what does "healthy" look like on this host? ---------
+    # Moderate (non-overloaded) load on the same engine and the same
+    # per-admission infrastructure tax, but none of the injected faults:
+    # the healthy distribution then includes the occasional *single*
+    # admission stall that normal slot churn costs resident streams, so
+    # the SLO derived from it budgets for the system as deployed rather
+    # than a fault-free idealization.
+    _warm_plain(params, cfg, plens=prompt_lens, chunk=base_chunk, ekw=ekw)
+    healthy_reqs = poisson_requests(
+        cfg, n_requests=2 * max_slots, rate_hz=5.0,
+        prompt_lens=prompt_lens, gen_len=gen_short, seed=3)
+    healthy_faults = FaultInjector(FaultConfig(
+        seed=fcfg.seed, admission_delay_s=fcfg.admission_delay_s)) \
+        if faults else None
+    healthy_eng = ServeEngine(params, cfg, decode_chunk=base_chunk,
+                              faults=healthy_faults, **ekw)
+    healthy_outs = healthy_eng.run(healthy_reqs)
+    healthy_p99 = steady_tpot_p99(healthy_outs)
+    slo_s = SLO_MARGIN * healthy_p99
+    slo = SLOConfig(tpot_ms=slo_s * 1e3, queue_keep_per_slot=5.0,
+                    queue_high_per_slot=3.0)
+
+    # -- controlled: tiers + SLO control loop + fault injection -----------
+    ctrl = ServeEngine(params, cfg, decode_chunk=base_chunk, slo=slo,
+                       tiers=tier_specs,
+                       faults=FaultInjector(fcfg) if faults else None,
+                       **ekw)
+    ctrl.warm_tiers(prompt_lens=prompt_lens)
+    traces_before = trace_events()
+    ctrl_outs = ctrl.run(reqs)
+    traces_after = trace_events()
+    recompiled = {k: traces_after[k] - traces_before.get(k, 0)
+                  for k in traces_after
+                  if traces_after[k] != traces_before.get(k, 0)}
+    if recompiled:
+        raise SystemExit(
+            "fig11_serve --bursty: the controlled engine recompiled after "
+            f"warm_tiers (trace deltas: {recompiled}) — tier switches "
+            "must be pointer swaps into already-compiled executables"
+        )
+    ctrl_met = ctrl.metrics(label="controlled")
+    ctrl_p99 = steady_tpot_p99(ctrl_outs)
+    shed_rate = ctrl.stats["shed"] / n_total
+
+    # -- uncontrolled: same trace, same fault schedule, no control loop ---
+    unctrl = ServeEngine(params, cfg, decode_chunk=base_chunk,
+                         faults=FaultInjector(fcfg) if faults else None,
+                         **ekw)
+    unctrl_outs = unctrl.run(reqs)
+    unctrl_met = unctrl.metrics(label="uncontrolled")
+    unctrl_p99 = steady_tpot_p99(unctrl_outs)
+
+    fallbacks = _fallback_traces()
+    if fallbacks:
+        raise SystemExit(
+            "fig11_serve --bursty: sparse tier traced through the dense "
+            f"fallback: {fallbacks}"
+        )
+
+    print("mode,served,shed,timeout,steady_p99_ms,p99_over_slo")
+    for label, met, p99, stats in (
+            ("controlled", ctrl_met, ctrl_p99, ctrl.stats),
+            ("uncontrolled", unctrl_met, unctrl_p99, unctrl.stats)):
+        print(f"{label},{met.num_requests},{stats['shed']},"
+              f"{stats['timeout']},{p99 * 1e3:.1f},{p99 / slo_s:.2f}")
+    print(f"slo_tpot_ms: {slo_s * 1e3:.1f} "
+          f"(= {SLO_MARGIN:.1f} x healthy steady p99 "
+          f"{healthy_p99 * 1e3:.1f} ms)")
+    print(f"controlled: tier_switches={ctrl.stats['tier_switches']} "
+          f"shed_rate={shed_rate:.1%} "
+          f"fault_retries={ctrl.stats['fault_retries']} "
+          f"slo_attainment={ctrl_met.slo_attainment:.2f} "
+          f"controller={ctrl._controller.counters}")
+
+    gates = {
+        "controlled_p99_within_slo": bool(ctrl_p99 <= slo_s),
+        "shed_rate_below_max": bool(shed_rate < SHED_RATE_MAX),
+    }
+    if faults:
+        # the >= 2x-SLO overload contrast is the *fault-injected* story
+        # (slow-decode windows + per-admission delays amplify what the
+        # uncontrolled admission waves cost); without --faults the burst
+        # alone is a milder overload and only the controlled-side gates
+        # are asserted — the ratio is still recorded either way
+        gates["uncontrolled_p99_exceeds_2x_slo"] = \
+            bool(unctrl_p99 >= UNCTRL_FACTOR * slo_s)
+    section = {
+        "config": {
+            "arch": "bert-base-sten(serving-smoke)",
+            "tiers": tier_specs, "max_slots": max_slots,
+            "decode_chunk": base_chunk, "n_requests": n_total,
+            "prompt_lens": list(prompt_lens), "gen_lens": list(gen_lens),
+            "bursts": [[0.05, burst_size], [1.5, burst_size]],
+            "faults": bool(faults),
+            "fault_config": {
+                "seed": fcfg.seed, "spike_prob": fcfg.spike_prob,
+                "slow_windows": [list(w) for w in fcfg.slow_windows],
+                "error_prob": fcfg.error_prob,
+                "admission_delay_s": fcfg.admission_delay_s,
+            },
+            "quick": bool(quick),
+        },
+        "healthy_steady_tpot_p99": healthy_p99,
+        "slo_margin": SLO_MARGIN,
+        "slo_tpot_ms": slo_s * 1e3,
+        "controlled": {
+            **ctrl_met.to_dict(), "steady_tpot_p99": ctrl_p99,
+            "p99_over_slo": ctrl_p99 / slo_s, "shed_rate": shed_rate,
+            "stats": dict(ctrl.stats),
+            "controller": dict(ctrl._controller.counters),
+            "tokens_by_tier": dict(ctrl.tokens_by_tier),
+        },
+        "uncontrolled": {
+            **unctrl_met.to_dict(), "steady_tpot_p99": unctrl_p99,
+            "p99_over_slo": unctrl_p99 / slo_s,
+            "stats": dict(unctrl.stats),
+        },
+        "recompile_free_after_warmup": True,
+        "gates": gates,
+    }
+    try:
+        with open(out_json) as f:
+            payload = json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError):
+        payload = {"benchmark": "fig11_serve"}
+    payload["slo"] = section
+    atomic_write_json(out_json, payload)
+    print(f"wrote {out_json}")
+    failed = [k for k, ok in gates.items() if not ok]
+    if failed:
+        raise SystemExit(
+            f"fig11_serve --bursty: SLO gates failed: {failed} "
+            f"(slo={slo_s * 1e3:.1f}ms controlled={ctrl_p99 * 1e3:.1f}ms "
+            f"uncontrolled={unctrl_p99 * 1e3:.1f}ms "
+            f"shed_rate={shed_rate:.1%})"
+        )
+    print(f"gates passed: controlled p99 {ctrl_p99 / slo_s:.2f}x SLO, "
+          f"uncontrolled {unctrl_p99 / slo_s:.2f}x SLO, "
+          f"shed rate {shed_rate:.1%}")
 
 
 def main(quick=False, out_json=OUT_JSON, table=None):
@@ -439,12 +688,13 @@ def main(quick=False, out_json=OUT_JSON, table=None):
             prev = json.load(f)
     except (FileNotFoundError, json.JSONDecodeError):
         prev = {}
-    if "paged" in prev:
-        # --paged results live in their own section; a dense-vs-sparse
-        # rerun refreshes its sections without discarding them
-        payload["paged"] = prev["paged"]
-    with open(out_json, "w") as f:
-        json.dump(payload, f, indent=2)
+    for section in ("paged", "slo"):
+        if section in prev:
+            # --paged / --bursty results live in their own sections; a
+            # dense-vs-sparse rerun refreshes its numbers without
+            # discarding them
+            payload[section] = prev[section]
+    atomic_write_json(out_json, payload)
     print(f"wrote {out_json}")
 
 
@@ -462,8 +712,22 @@ if __name__ == "__main__":
                     metavar="F",
                     help="fraction of each prompt that is a common shared "
                          "prefix in the --paged trace (default 0.97)")
+    ap.add_argument("--bursty", action="store_true",
+                    help="run the SLO overload benchmark: controlled "
+                         "engine (tiers + control loop) vs uncontrolled "
+                         "under the same bursty arrival trace")
+    ap.add_argument("--faults", action="store_true",
+                    help="with --bursty, inject the seeded fault schedule "
+                         "(latency spikes, slow-decode windows, transient "
+                         "errors, admission delays) into both engines")
     args = ap.parse_args()
-    if args.paged:
+    if args.faults and not args.bursty:
+        ap.error("--faults requires --bursty")
+    if args.bursty and args.paged:
+        ap.error("--bursty and --paged are separate modes")
+    if args.bursty:
+        slo_main(quick=args.quick, faults=args.faults)
+    elif args.paged:
         paged_main(quick=args.quick,
                    shared_prefix_frac=args.shared_prefix_frac)
     else:

@@ -9,9 +9,10 @@ trajectory ingests).
 """
 
 import argparse
-import json
 import time
 import traceback
+
+from repro.ioutil import atomic_write_json
 
 from benchmarks import (
     fig6_spmm,
@@ -81,15 +82,14 @@ def main() -> None:
         {"name": name, "us_per_call": secs * 1e6, "derived": status}
         for name, secs, status in summary
     ]
-    with open(args.json, "w") as f:
-        json.dump({
-            "benchmark": "bench",
-            "quick": bool(args.quick),
-            # wall time per benchmark, then each benchmark's own
-            # per-measurement records (e.g. fig6_spmm's per-(path, M)
-            # kernel timings)
-            "results": results + detail,
-        }, f, indent=2)
+    atomic_write_json(args.json, {
+        "benchmark": "bench",
+        "quick": bool(args.quick),
+        # wall time per benchmark, then each benchmark's own
+        # per-measurement records (e.g. fig6_spmm's per-(path, M)
+        # kernel timings)
+        "results": results + detail,
+    })
     print(f"wrote {args.json}")
 
     if any("FAIL" in s for _, _, s in summary):

@@ -1,0 +1,37 @@
+"""Small I/O utilities shared by the serving/tuning/benchmark layers.
+
+:func:`atomic_write_json` is the one way any repro artifact (``BENCH_*``
+merges, ``ServeMetrics.dump_json``, the ``TuningTable`` cache) reaches
+disk: serialize to a pid-unique temp file in the destination directory,
+then ``os.replace`` into place.  A reader therefore never observes a torn
+or truncated file, and a run killed mid-write leaves the previous
+artifact intact instead of a corrupt one — the writer-side completion of
+the truncated-table *read* hardening from ``repro.tune``
+(``TuningTable.load`` tolerating corrupt files).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+__all__ = ["atomic_write_json"]
+
+
+def atomic_write_json(path: str, obj: Any, *, indent: int = 2,
+                      sort_keys: bool = False) -> None:
+    """Atomically serialize ``obj`` as JSON to ``path``.
+
+    The temp file is pid-unique (concurrent writers cannot interleave
+    bytes) and lives next to the destination so the final ``os.replace``
+    is a same-filesystem atomic rename.  On any serialization or write
+    failure the temp file is removed and ``path`` is left untouched."""
+    tmp = f"{path}.{os.getpid()}.tmp"
+    try:
+        with open(tmp, "w") as f:
+            json.dump(obj, f, indent=indent, sort_keys=sort_keys)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)

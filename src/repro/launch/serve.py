@@ -92,6 +92,8 @@ def _run_engine(args, cfg, params, key) -> int:
                    num_pages=args.num_pages,
                    prefix_sharing=not args.no_prefix_sharing)
     warm = not args.no_warmup
+    if args.slo_tpot_ms is not None or args.tiers:
+        return _run_slo_engine(args, cfg, params, reqs, ekw, warm)
     if args.sparse:
         n, m, g = (int(v) for v in args.nm.split(":"))
         results = compare_dense_sparse(params, cfg, reqs, nm=(n, m, g),
@@ -123,6 +125,44 @@ def _run_engine(args, cfg, params, key) -> int:
               f"{kv['shared_tokens']} prompt tokens prefix-shared, "
               f"{kv['cow_copies']} copy-on-write page copies, "
               f"{eng.stats['preemptions']} preemptions")
+    return 0
+
+
+def _run_slo_engine(args, cfg, params, reqs, ekw, warm) -> int:
+    """``--engine`` with the SLO control loop: resident sparsity tiers,
+    hysteresis degradation ladder, optional seeded fault injection."""
+    from repro.serve import FaultConfig, FaultInjector, SLOConfig, \
+        trace_events
+
+    tiers = [t.strip() for t in (args.tiers or "dense,1:4:8-gr64").split(",")
+             if t.strip()]
+    slo = SLOConfig(
+        tpot_ms=args.slo_tpot_ms if args.slo_tpot_ms is not None else 50.0,
+        ttft_ms=args.slo_ttft_ms,
+    )
+    faults = None
+    if args.faults:
+        faults = FaultInjector(FaultConfig(
+            seed=args.seed, spike_prob=0.02, error_prob=0.02,
+            slow_windows=((20, 40, 3.0),),
+        ))
+    eng = ServeEngine(params, cfg, slo=slo, tiers=tiers, faults=faults,
+                      **ekw)
+    if warm:
+        eng.warm_tiers(sorted({int(r.prompt.size) for r in reqs}))
+    traced_after_warm = dict(trace_events())
+    eng.run(reqs)
+    met = eng.metrics(label="slo")
+    print(met.report())
+    print(f"tiers: {', '.join(tiers)} | tier switches "
+          f"{eng.stats['tier_switches']} | shed {eng.stats['shed']} | "
+          f"timeout {eng.stats['timeout']} | fault retries "
+          f"{eng.stats['fault_retries']}")
+    new_traces = {k: v - traced_after_warm.get(k, 0)
+                  for k, v in trace_events().items()
+                  if v != traced_after_warm.get(k, 0)}
+    if new_traces:
+        print(f"WARNING: serving recompiled after warmup: {new_traces}")
     return 0
 
 
@@ -163,6 +203,24 @@ def main(argv=None):
                          "pool to the slot cache's KV footprint")
     ap.add_argument("--no-prefix-sharing", action="store_true",
                     help="--paged: disable content-hash prefix sharing")
+    ap.add_argument("--slo-tpot-ms", type=float, default=None,
+                    help="--engine mode: enable the SLO control loop with "
+                         "this per-token-latency objective (hysteresis "
+                         "ladder: defer admissions -> sparser weight tier "
+                         "-> shed; see docs/serving.md)")
+    ap.add_argument("--slo-ttft-ms", type=float, default=None,
+                    help="optional time-to-first-token objective for the "
+                         "SLO attainment metric")
+    ap.add_argument("--tiers", default=None,
+                    help="comma-separated sparsity tiers, densest first "
+                         "(e.g. 'dense,2:4,1:4:8-gr64'); implies the SLO "
+                         "control loop (default SLO if --slo-tpot-ms is "
+                         "not given)")
+    ap.add_argument("--faults", action="store_true",
+                    help="--engine mode with SLO loop: inject the "
+                         "deterministic seeded fault schedule (latency "
+                         "spikes, slow-decode windows, retried transient "
+                         "errors) from serve/faults.py")
     ap.add_argument("--no-warmup", action="store_true",
                     help="skip the pre-compile pass; reported latencies "
                          "then include XLA compile stalls")
@@ -181,6 +239,14 @@ def main(argv=None):
     if args.paged and not args.engine:
         ap.error("--paged requires --engine (the one-shot path has no "
                  "slot scheduler to page)")
+    if (args.slo_tpot_ms is not None or args.tiers or args.faults) \
+            and not args.engine:
+        ap.error("--slo-tpot-ms/--slo-ttft-ms/--tiers/--faults require "
+                 "--engine (the SLO control loop runs the continuous-"
+                 "batching scheduler)")
+    if args.faults and args.slo_tpot_ms is None and not args.tiers:
+        ap.error("--faults needs the SLO control loop; pass --slo-tpot-ms "
+                 "and/or --tiers")
     if args.tune and not args.engine:
         # the one-shot path has no warmup/tuning hook; accepting the flag
         # there would report an untuned run as tuned

@@ -1,11 +1,12 @@
 """repro.serve — continuous-batching sparse serving engine (paper Fig 11
 as a service: slot-based scheduling, per-slot KV caches — slot-pool or
 paged with copy-on-write prefix sharing — dense vs n:m:g weights side by
-side)."""
+side), plus the SLO control loop that degrades quality (sparser weight
+tiers, deferred admissions, load shedding) instead of latency under
+overload, and the seeded fault injector that proves it."""
 
 from repro.serve.cache import (
     PagedKVCache,
-    PromptTooLongError,
     SlotKVCache,
     gather_slots,
     paged_commit,
@@ -18,6 +19,15 @@ from repro.serve.engine import (
     sparsify_for_serving,
     warmup_engine,
 )
+from repro.serve.errors import (
+    DeadlineExceededError,
+    EngineOverloadError,
+    InjectedFaultError,
+    PromptTooLongError,
+    ServeError,
+    raise_for_output,
+)
+from repro.serve.faults import FaultConfig, FaultInjector, burst_arrivals
 from repro.serve.metrics import ServeMetrics, summarize
 from repro.serve.queue import (
     PageAllocator,
@@ -28,13 +38,42 @@ from repro.serve.queue import (
     prefix_hashes,
     sample_token,
 )
+from repro.serve.slo import (
+    CadenceWatchdog,
+    LatencyModel,
+    SLOConfig,
+    SLOController,
+    Tier,
+    TierSpec,
+    build_tiers,
+)
+from repro.serve.tracecount import (
+    note_trace,
+    reset_trace_events,
+    trace_events,
+)
 
 __all__ = [
     "ServeEngine",
     "SlotKVCache",
     "PagedKVCache",
     "PageAllocator",
+    "ServeError",
     "PromptTooLongError",
+    "DeadlineExceededError",
+    "EngineOverloadError",
+    "InjectedFaultError",
+    "raise_for_output",
+    "FaultConfig",
+    "FaultInjector",
+    "burst_arrivals",
+    "SLOConfig",
+    "SLOController",
+    "CadenceWatchdog",
+    "LatencyModel",
+    "Tier",
+    "TierSpec",
+    "build_tiers",
     "ServeMetrics",
     "Request",
     "RequestOutput",
@@ -50,4 +89,7 @@ __all__ = [
     "gather_slots",
     "paged_view",
     "paged_commit",
+    "note_trace",
+    "trace_events",
+    "reset_trace_events",
 ]

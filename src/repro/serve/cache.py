@@ -48,18 +48,14 @@ from repro.models.common import ModelConfig
 # the slot writer's structural helpers: which cache leaves carry a seq
 # axis, and the storage-dtype cast (int8 KV quantization)
 from repro.models.transformer import _seq_leaf_kinds, _to_cache_dtype
+# PromptTooLongError lives in the typed serve error family now; re-exported
+# here because this module is where it historically came from
+from repro.serve.errors import PromptTooLongError
 from repro.serve.queue import PageAllocator, prefix_hashes
+from repro.serve.tracecount import note_trace
 
 __all__ = ["SlotKVCache", "PagedKVCache", "PromptTooLongError",
            "reset_slot", "gather_slots", "paged_view", "paged_commit"]
-
-
-class PromptTooLongError(ValueError):
-    """A prompt exceeds the cache's per-slot capacity.
-
-    Raised (instead of an ``AssertionError``) by the admission paths so
-    the serving engine can catch it and reject the single offending
-    request while the serve loop keeps running."""
 
 
 @functools.lru_cache(maxsize=16)
@@ -74,12 +70,13 @@ def _jit_slot_prefill(cfg: ModelConfig):
     traced prompt length, so an unbounded cache leaks compiled programs in
     a long-running engine that cycles through many configs.  Eviction of a
     cold config only costs a recompile if it returns."""
-    return jax.jit(
-        lambda p, toks, cache, slot, off: prefill_into_slot(
-            p, cfg, toks, cache, slot, write_offset=off
-        ),
-        donate_argnums=(2,),
-    )
+
+    def _prefill(p, toks, cache, slot, off):
+        note_trace("slot_prefill")  # trace-time only: counts compilations
+        return prefill_into_slot(p, cfg, toks, cache, slot,
+                                 write_offset=off)
+
+    return jax.jit(_prefill, donate_argnums=(2,))
 
 
 @jax.jit
@@ -253,6 +250,7 @@ def _jit_paged_prefill(cfg: ModelConfig, page_size: int, num_pages: int):
     prompt length, like the slot prefill."""
 
     def run(p, toks, pool, table_row, slot, start):
+        note_trace("paged_prefill")  # trace-time only: counts compilations
         hidden, _, contribs, _ = forward(
             p, cfg, toks, remat="none", collect_cache=True,
         )

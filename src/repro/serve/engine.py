@@ -44,9 +44,15 @@ from repro.models import decode_step, init_cache, prefill
 from repro.models.common import ModelConfig
 from repro.serve.cache import PagedKVCache, PromptTooLongError, \
     SlotKVCache, paged_commit, paged_view
+from repro.serve.errors import EngineOverloadError, InjectedFaultError, \
+    ServeError
+from repro.serve.faults import FaultInjector
 from repro.serve.metrics import ServeMetrics, summarize
 from repro.serve.queue import Request, RequestOutput, RequestQueue, \
     sample_token
+from repro.serve.slo import LatencyModel, SLOConfig, SLOController, \
+    build_tiers
+from repro.serve.tracecount import note_trace
 
 __all__ = ["ServeEngine", "sparsify_for_serving", "compare_dense_sparse",
            "warmup_engine", "serve_programs"]
@@ -73,6 +79,7 @@ def _decode_fn(cfg: ModelConfig):
     *identical* program the runtime jits."""
 
     def step(p, tok, cache, pos):
+        note_trace("decode")  # trace-time only: counts compilations
         return decode_step(p, cfg, tok, cache, pos)
 
     return step
@@ -83,6 +90,8 @@ def _decode_chunk_fn(cfg: ModelConfig, n_steps: int):
     split out for the same reason as :func:`_decode_fn`."""
 
     def chunk(p, tok, cache, pos):
+        note_trace("decode_chunk")  # trace-time only: counts compilations
+
         def body(carry, _):
             tok, cache, pos = carry
             logits, cache = decode_step(p, cfg, tok, cache, pos)
@@ -152,6 +161,7 @@ def _jit_paged_decode(cfg: ModelConfig, page_size: int, num_pages: int):
     the gather/commit pair updates it in place."""
 
     def step(p, tok, pool, table, pos):
+        note_trace("paged_decode")  # trace-time only: counts compilations
         view = paged_view(cfg, pool, table, page_size)
         logits, view = decode_step(p, cfg, tok, view, pos)
         pool = paged_commit(cfg, pool, view, table, pos, 1, page_size,
@@ -173,6 +183,7 @@ def _jit_paged_decode_chunk(cfg: ModelConfig, page_size: int,
     destinations resolve to the sentinel page and are dropped."""
 
     def chunk(p, tok, pool, table, pos):
+        note_trace("paged_decode_chunk")  # trace-time: counts compilations
         view = paged_view(cfg, pool, table, page_size)
 
         def body(carry, _):
@@ -267,6 +278,24 @@ class ServeEngine:
         non-greedy streams restart their seeded RNG).
     page_size, num_pages, prefix_sharing : forwarded to
         :class:`PagedKVCache` when ``paged``.
+    slo : :class:`~repro.serve.slo.SLOConfig` enabling the SLO control
+        loop: a hysteresis state machine over the degradation ladder
+        (defer admissions / shrink decode chunk -> sparser weight tier ->
+        shed lowest-priority queued work), driven by a decode-cadence
+        watchdog and a table-seeded latency model.
+    tiers : sparsity-tier specs (densest first — strings like ``"dense"``,
+        ``"2:4"``, ``"1:4:8-gr64"`` or :class:`~repro.serve.slo.TierSpec`),
+        pre-converted once here so a controller tier switch is a pytree
+        pointer swap into an already-compiled decode program (call
+        :meth:`warm_tiers` after construction to compile every tier
+        eagerly).  ``params`` must be the *dense* weights when tiers are
+        given; tier 0 is what the engine serves when healthy.
+    faults : a :class:`~repro.serve.faults.FaultInjector` wrapping the
+        decode/admission paths (deterministic seeded latency spikes,
+        slow-decode windows, transient errors retried with capped
+        exponential backoff) — the overload benchmark's chaos source.
+    max_queue : bound the arrival queue; ``submit()`` past the bound
+        raises :class:`~repro.serve.errors.EngineOverloadError`.
     """
 
     def __init__(self, params, cfg: ModelConfig, *,
@@ -276,7 +305,11 @@ class ServeEngine:
                  clock: Callable[[], float] = time.perf_counter,
                  paged: bool = False, page_size: int = 16,
                  num_pages: Optional[int] = None,
-                 prefix_sharing: bool = True):
+                 prefix_sharing: bool = True,
+                 slo: Optional[SLOConfig] = None,
+                 tiers: Optional[Iterable] = None,
+                 faults: Optional[FaultInjector] = None,
+                 max_queue: Optional[int] = None):
         self.params = params
         self.cfg = cfg
         self.max_slots = max_slots
@@ -285,6 +318,33 @@ class ServeEngine:
         self.decode_chunk = max(1, decode_chunk)
         self.paged = paged
         self.queue = RequestQueue()
+        self.faults = faults
+        self.max_queue = max_queue
+        self.tiers = build_tiers(params, list(tiers)) if tiers else None
+        self.tier_idx = 0
+        if self.tiers:
+            self.params = self.tiers[0].params
+        self.tokens_by_tier = (
+            {t.spec.name: 0 for t in self.tiers} if self.tiers else None
+        )
+        self.slo = slo
+        if slo is not None:
+            self._latency = LatencyModel(self.params, cfg,
+                                         max_slots=max_slots)
+            self._controller: Optional[SLOController] = SLOController(
+                slo, n_tiers=len(self.tiers) if self.tiers else 1,
+                max_slots=max_slots, latency=self._latency)
+        else:
+            self._latency = None
+            self._controller = None
+        #: decode-chunk sizes this engine may run (compiled at warmup):
+        #: the base chunk, the controller's shrunk chunk, and 1 (the
+        #: non-greedy / degraded fallback)
+        self._chunk_sizes = sorted({self.decode_chunk, 1} | (
+            {max(1, self.decode_chunk // max(1, slo.chunk_shrink))}
+            if slo is not None else set()
+        ))
+        self._decode_calls = 0  # global decode-call index (fault schedule)
         if paged:
             self.kv = PagedKVCache(cfg, max_slots, max_seq_len,
                                    page_size=page_size, num_pages=num_pages,
@@ -305,9 +365,11 @@ class ServeEngine:
             )
         #: scheduler counters (all zero for the slot cache except
         #: rejected/peak_active): deferred admissions, mid-stream
-        #: preemptions, rejected requests, peak concurrently-active slots
+        #: preemptions, rejected requests, peak concurrently-active slots,
+        #: plus the SLO/fault loop's shed/timeout/retry/tier-switch counts
         self.stats = {"deferred_admissions": 0, "preemptions": 0,
-                      "rejected": 0, "peak_active": 0}
+                      "rejected": 0, "peak_active": 0, "shed": 0,
+                      "timeout": 0, "fault_retries": 0, "tier_switches": 0}
         # chunked decode falls back to single-step once a lone slot cannot
         # get a full chunk's pages; cleared when a request finishes (pages
         # freed) — see _ensure_decode_pages
@@ -335,10 +397,25 @@ class ServeEngine:
 
     # -- request lifecycle ------------------------------------------------
     def submit(self, req: Request) -> None:
-        """Enqueue a request.  Over-long prompts are *not* checked here:
-        admission raises :class:`PromptTooLongError`, which the scheduler
-        converts into a ``finish_reason="rejected"`` output — one bad
-        request must not kill the serve loop."""
+        """Enqueue a request, validating it against this engine's capacity
+        *now* rather than failing later at admission: a prompt that cannot
+        fit the per-slot cache (prompt + at least one generated token)
+        raises :class:`PromptTooLongError`, and a full bounded queue
+        raises :class:`~repro.serve.errors.EngineOverloadError`.  Traces
+        fed through :meth:`run` get these converted to ``"rejected"``
+        outputs instead — one bad request must not kill a serve loop."""
+        S = int(req.prompt.size)
+        if S > self.max_seq_len:
+            raise PromptTooLongError(
+                f"request {req.uid}: prompt length {S} exceeds the "
+                f"per-slot capacity {self.max_seq_len} (prompt plus at "
+                f"least one generated token must fit)"
+            )
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            raise EngineOverloadError(
+                f"request {req.uid}: queue is at its bound "
+                f"({self.max_queue}); retry later or raise max_queue"
+            )
         self.queue.push(req)
 
     def _reject(self, req: Request, now: float) -> None:
@@ -346,8 +423,22 @@ class ServeEngine:
             uid=req.uid, prompt_len=int(req.prompt.size), tokens=[],
             finish_reason="rejected", arrival_time=req.arrival_time,
             admitted_time=now, finish_time=self._now(), token_times=[],
+            deadline=req.deadline,
         ))
         self.stats["rejected"] += 1
+
+    def _finish_unserved(self, req: Request, now: float,
+                         reason: str) -> None:
+        """Terminal outcome for a request that never occupied a slot:
+        ``"timeout"`` (deadline expired while queued / predicted blown at
+        admission) or ``"shed"`` (the controller dropped it)."""
+        self._outputs.append(RequestOutput(
+            uid=req.uid, prompt_len=int(req.prompt.size), tokens=[],
+            finish_reason=reason, arrival_time=req.arrival_time,
+            admitted_time=now, finish_time=self._now(), token_times=[],
+            deadline=req.deadline,
+        ))
+        self.stats[reason] += 1
 
     def _admit(self, slot: int, req: Request, now: float) -> bool:
         """Prefill ``req`` into ``slot`` and sample its first token.
@@ -355,6 +446,9 @@ class ServeEngine:
         the paged pool cannot supply the prompt's pages; raises
         :class:`PromptTooLongError` for over-long prompts."""
         prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+        if self.faults is not None:
+            self.faults.admission_delay()
+        t_pre = self._now()
         if self.paged:
             logits = self.kv.admit(self.params, prompt, slot)
             if logits is None:
@@ -362,6 +456,8 @@ class ServeEngine:
         else:
             logits = self.kv.write_prefill(self.params, prompt, slot)
         S = int(req.prompt.size)
+        if self._latency is not None:
+            self._latency.observe_prefill(S, self._now() - t_pre)
         # token i (1-based) is written to the cache at position S + i - 1,
         # so generating N tokens needs S + N - 1 <= max_seq_len
         max_new = min(req.max_new_tokens, self.max_seq_len - S + 1)
@@ -394,6 +490,7 @@ class ServeEngine:
             admitted_time=st.admitted_time,
             finish_time=self._now(),
             token_times=list(st.token_times),
+            deadline=st.req.deadline,
         ))
         self._slots[slot] = None
         self._pos[slot] = 0
@@ -452,20 +549,118 @@ class ServeEngine:
             self._preempt(pending.pop())
         return sorted(ok)
 
+    # -- sparsity tiers ----------------------------------------------------
+    def set_tier(self, idx: int) -> None:
+        """Serve from tier ``idx``'s resident weight copy.  A pure pytree
+        pointer swap: the jitted decode programs key their executables on
+        param structure, so after :meth:`warm_tiers` this never
+        recompiles (``trace_events()`` stays flat across switches)."""
+        if self.tiers is None:
+            raise ValueError("engine was built without tiers")
+        if idx == self.tier_idx:
+            return
+        self.params = self.tiers[idx].params
+        self.tier_idx = idx
+        self.stats["tier_switches"] += 1
+
+    def warm_tiers(self, prompt_lens: Iterable[int] = (8,)) -> None:
+        """Eagerly compile every (tier, program) the controller may run:
+        each tier's prefill (per distinct prompt length), single-step
+        decode, and every chunk size in ``self._chunk_sizes`` — by serving
+        a tiny trace per (tier, chunk size) through throwaway engines that
+        share this engine's module-level jit caches.  After this, tier
+        switches and chunk shrinks at serve time are pointer swaps into
+        already-compiled executables."""
+        if self.tiers is None:
+            return
+        plens = sorted({int(p) for p in prompt_lens}) or [8]
+        kw = dict(max_slots=self.max_slots, max_seq_len=self.max_seq_len,
+                  paged=self.paged)
+        if self.paged:
+            kw.update(page_size=self.kv.page_size,
+                      num_pages=self.kv.num_pages)
+        for tier in self.tiers:
+            for T in self._chunk_sizes:
+                reqs = [Request(uid=-1 - i,
+                                prompt=np.arange(1, plen + 1) % 7 + 1,
+                                max_new_tokens=max(2, T + 1))
+                        for i, plen in enumerate(plens)]
+                # max_new > T forces the chunked path through a full chunk
+                # plus the tail; a lone non-greedy request warms the
+                # single-step program (T == 1 runs it directly)
+                eng = ServeEngine(tier.params, self.cfg, decode_chunk=T,
+                                  **kw)
+                eng.run(reqs)
+
+    # -- fault hooks -------------------------------------------------------
+    def _fault_gate(self, step_idx: int) -> None:
+        """Run the injector's pre-decode gate, retrying injected transient
+        faults with capped exponential backoff.  A burst outlasting
+        ``max_retries`` propagates — that is a real outage, not jitter."""
+        f = self.faults
+        if f is None:
+            return
+        attempt = 0
+        while True:
+            try:
+                f.pre_decode(step_idx)
+                return
+            except InjectedFaultError:
+                if attempt >= f.cfg.max_retries:
+                    raise
+                self.stats["fault_retries"] += 1
+                f.sleep(min(f.cfg.backoff_s * (2 ** attempt),
+                            f.cfg.backoff_cap_s))
+                attempt += 1
+
+    def _fault_post(self, step_idx: int, measured_s: float) -> None:
+        if self.faults is not None:
+            self.faults.post_decode(step_idx, measured_s)
+
+    def _count_tokens(self, produced: int) -> None:
+        if self.tokens_by_tier is not None and produced:
+            self.tokens_by_tier[
+                self.tiers[self.tier_idx].spec.name] += produced
+
     # -- the engine loop --------------------------------------------------
     def step(self) -> int:
-        """One scheduler iteration: admit ready requests into free slots,
-        then run one decode *chunk* over the batch (``decode_chunk`` steps
-        device-resident when every active request is greedy, one host-paced
-        step otherwise).  Returns the number of tokens produced (0 when the
-        engine idled)."""
+        """One scheduler iteration: expire/shed queued work, let the SLO
+        controller pick the degradation level, admit ready requests into
+        free slots (all of them when steady, a rationed budget when
+        degraded), then run one decode *chunk* over the batch
+        (``decode_chunk`` steps device-resident when every active request
+        is greedy, one host-paced step otherwise).  Returns the number of
+        tokens produced (0 when the engine idled)."""
         now = self._now()
         produced = 0
+        for req in self.queue.expired(now):
+            self._finish_unserved(req, now, "timeout")
+        ctrl = self._controller
+        if ctrl is not None:
+            ctrl.begin_step(now, len(self.queue))
+            if self.tiers is not None:
+                self.set_tier(ctrl.tier_index)
+            if ctrl.should_shed(len(self.queue)):
+                for req in self.queue.shed(ctrl.shed_keep()):
+                    self._finish_unserved(req, now, "shed")
         free = self.free_slots()
-        while free:
+        budget = len(free) if ctrl is None \
+            else ctrl.admission_budget(len(free))
+        while free and budget > 0:
             req = self.queue.pop_ready(now)
             if req is None:
                 break
+            if req.deadline is not None and self._latency is not None:
+                # admission-time cost prediction: a request that cannot
+                # possibly finish inside its deadline times out now,
+                # without burning a slot on doomed work
+                est = self._latency.request_s(
+                    int(req.prompt.size),
+                    min(req.max_new_tokens,
+                        self.max_seq_len - int(req.prompt.size) + 1))
+                if est == est and now + est > req.deadline:
+                    self._finish_unserved(req, now, "timeout")
+                    continue
             try:
                 admitted = self._admit(free[0], req, now)
             except PromptTooLongError:
@@ -479,16 +674,24 @@ class ServeEngine:
                 self.stats["deferred_admissions"] += 1
                 break
             free.pop(0)
+            budget -= 1
             produced += 1  # the first token sampled from prefill logits
         active = [i for i, s in enumerate(self._slots) if s is not None]
         self.stats["peak_active"] = max(self.stats["peak_active"],
                                         len(active))
         if not active:
+            self._count_tokens(produced)
             return produced
-        if (self._decode_chunk is not None and not self._force_single
+        T = self.decode_chunk if ctrl is None \
+            else ctrl.decode_chunk(self.decode_chunk)
+        if (T > 1 and self._decode_chunk is not None
+                and not self._force_single
                 and all(self._slots[s].req.sampling.greedy for s in active)):
-            return produced + self._step_chunked(active)
-        return produced + self._step_single(active)
+            produced += self._step_chunked(active, T)
+        else:
+            produced += self._step_single(active)
+        self._count_tokens(produced)
+        return produced
 
     def _step_single(self, active) -> int:
         """Per-token reference path: one decode step, host-side sampling."""
@@ -497,6 +700,10 @@ class ServeEngine:
             active = self._ensure_decode_pages(active, 1)
             if not active:
                 return 0
+        step_idx = self._decode_calls
+        self._decode_calls += 1
+        self._fault_gate(step_idx)
+        t0 = self._now()
         tok = jnp.asarray(self._tok[:, None])
         pos = jnp.asarray(self._pos)
         if self.paged:
@@ -506,7 +713,10 @@ class ServeEngine:
             logits, self.kv.data = self._decode(self.params, tok,
                                                 self.kv.data, pos)
         logits_np = np.asarray(logits)
+        self._fault_post(step_idx, self._now() - t0)
         t = self._now()
+        if self._controller is not None:
+            self._controller.observe_decode(t - t0, 1)
         for slot in active:
             st = self._slots[slot]
             nxt = sample_token(logits_np[slot], st.req.sampling, st.rng)
@@ -519,9 +729,21 @@ class ServeEngine:
                 self._finish(slot)
         return produced
 
-    def _step_chunked(self, active) -> int:
-        """Greedy fast path: ``decode_chunk`` steps in one jit call with
-        on-device argmax sampling, then a single chunked host fetch.
+    def _chunk_fn(self, T: int):
+        """The jitted chunk program for ``T`` steps — the pre-bound default
+        for the base chunk, the module-level cache (same compiled
+        executables) for the controller's shrunk chunk."""
+        if T == self.decode_chunk:
+            return self._decode_chunk
+        if self.paged:
+            return _jit_paged_decode_chunk(self.cfg, self.kv.page_size,
+                                           self.kv.num_pages, T)
+        return _jit_decode_chunk(self.cfg, T)
+
+    def _step_chunked(self, active, T: Optional[int] = None) -> int:
+        """Greedy fast path: ``T`` (default ``decode_chunk``) steps in one
+        jit call with on-device argmax sampling, then a single chunked
+        host fetch.
 
         The device loop always runs the full fixed-length chunk (one
         compiled program, no per-remaining-budget recompiles); tokens a
@@ -533,7 +755,7 @@ class ServeEngine:
         timestamps spread the measured chunk latency uniformly across the
         chunk's tokens (the stream's average decode cadence)."""
         produced = 0
-        T = self.decode_chunk
+        T = self.decode_chunk if T is None else T
         if self.paged:
             active = self._ensure_decode_pages(active, T)
             if active is None:
@@ -545,19 +767,26 @@ class ServeEngine:
                 return self._step_single(active) if active else 0
             if not active:
                 return 0
+        step_idx = self._decode_calls
+        self._decode_calls += 1
+        self._fault_gate(step_idx)
+        fn = self._chunk_fn(T)
         t0 = self._now()
         if self.paged:
-            toks, self.kv.data = self._decode_chunk(
+            toks, self.kv.data = fn(
                 self.params, jnp.asarray(self._tok[:, None]), self.kv.data,
                 self.kv.device_table(), jnp.asarray(self._pos),
             )
         else:
-            toks, self.kv.data = self._decode_chunk(
+            toks, self.kv.data = fn(
                 self.params, jnp.asarray(self._tok[:, None]), self.kv.data,
                 jnp.asarray(self._pos),
             )
         toks_np = np.asarray(toks)  # [T, max_slots] — one host sync
+        self._fault_post(step_idx, self._now() - t0)
         t1 = self._now()
+        if self._controller is not None:
+            self._controller.observe_decode(t1 - t0, T)
         for slot in active:
             st = self._slots[slot]
             for t in range(T):
@@ -580,11 +809,16 @@ class ServeEngine:
         ``run()``/``step()`` calls, so ``metrics()`` aggregates the full
         lifetime consistently (arrival_times are relative to the first
         call)."""
+        first_new = len(self._outputs)
         for req in requests:
-            self.submit(req)
+            try:
+                self.submit(req)
+            except ServeError:
+                # one bad request (over-long prompt, full bounded queue)
+                # must not kill a trace replay: it finishes as rejected
+                self._reject(req, self._now())
         if self._t0 is None:
             self._t0 = self._clock()
-        first_new = len(self._outputs)
         steps = 0
         while (len(self.queue) or self.num_active) and steps < max_steps:
             before = self.num_active
@@ -610,7 +844,14 @@ class ServeEngine:
 
     def metrics(self, *, label: str = "serve") -> ServeMetrics:
         wall = self._now() if self._t0 is not None else 0.0
-        return summarize(self._outputs, wall, label=label)
+        slo = self.slo
+        return summarize(
+            self._outputs, wall, label=label,
+            slo_tpot_s=None if slo is None else slo.tpot_ms * 1e-3,
+            slo_ttft_s=None if slo is None or slo.ttft_ms is None
+            else slo.ttft_ms * 1e-3,
+            tokens_by_tier=self.tokens_by_tier,
+        )
 
 
 def warmup_engine(params, cfg: ModelConfig, requests, *,

@@ -47,7 +47,15 @@ class SamplingParams:
 
 @dataclasses.dataclass
 class Request:
-    """One serving request: prompt tokens plus generation/stop settings."""
+    """One serving request: prompt tokens plus generation/stop settings.
+
+    ``priority`` orders admission (higher first) and shields a request
+    from load shedding — the SLO controller sheds lowest priority first.
+    ``deadline_s`` is an optional completion budget measured from
+    ``arrival_time``: a request still queued past its deadline finishes
+    as ``"timeout"`` without ever occupying a slot, and one predicted at
+    admission time to blow its deadline is timed out instead of admitted.
+    """
 
     uid: int
     prompt: np.ndarray                 # [S] int32 token ids
@@ -55,11 +63,20 @@ class Request:
     sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
     stop_tokens: tuple = ()            # any of these ends generation
     arrival_time: float = 0.0          # seconds after engine start
+    priority: int = 0                  # higher admits first, sheds last
+    deadline_s: Optional[float] = None  # completion budget from arrival
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
         assert self.prompt.size > 0, "empty prompt"
         assert self.max_new_tokens >= 1
+        assert self.deadline_s is None or self.deadline_s > 0
+
+    @property
+    def deadline(self) -> Optional[float]:
+        """Absolute deadline (engine clock), or None."""
+        return None if self.deadline_s is None \
+            else self.arrival_time + self.deadline_s
 
 
 @dataclasses.dataclass
@@ -72,11 +89,14 @@ class RequestOutput:
     uid: int
     prompt_len: int
     tokens: list
-    finish_reason: str                 # "length" | "stop" | "rejected"
+    # "length" | "stop" | "rejected" | "timeout" | "shed"
+    finish_reason: str
     arrival_time: float
     admitted_time: float
     finish_time: float
     token_times: list
+    deadline: Optional[float] = None   # absolute deadline, if the request
+    #                                    carried one (for SLO accounting)
 
     @property
     def ttft(self) -> float:
@@ -112,13 +132,53 @@ class RequestQueue:
         self._q.appendleft(req)
 
     def pop_ready(self, now: float) -> Optional[Request]:
-        # requests may be submitted out of arrival order; scan for the
-        # first due one (queues are engine-sized, so O(n) is fine)
+        """Hand out the best due request: highest ``priority`` first, then
+        earliest absolute deadline (no deadline sorts last), then
+        submission order.  Requests may be submitted out of arrival
+        order; queues are engine-sized, so the O(n) scan is fine."""
+        best_i = None
+        best_key = None
+        inf = float("inf")
         for i, req in enumerate(self._q):
-            if req.arrival_time <= now:
-                del self._q[i]
-                return req
-        return None
+            if req.arrival_time > now:
+                continue
+            key = (-req.priority,
+                   inf if req.deadline is None else req.deadline, i)
+            if best_key is None or key < best_key:
+                best_i, best_key = i, key
+        if best_i is None:
+            return None
+        req = self._q[best_i]
+        del self._q[best_i]
+        return req
+
+    def expired(self, now: float) -> list:
+        """Remove and return every queued request whose deadline has
+        passed — the engine finishes them as ``"timeout"`` without a
+        slot ever having been spent on them."""
+        out = [r for r in self._q
+               if r.deadline is not None and r.deadline < now]
+        if out:
+            dead = set(id(r) for r in out)
+            self._q = deque(r for r in self._q if id(r) not in dead)
+        return out
+
+    def shed(self, keep: int) -> list:
+        """Remove and return queued requests beyond ``keep``, shedding
+        lowest priority first and, within a priority, newest arrivals
+        first (the oldest work keeps its place — it has waited longest
+        and sheds last)."""
+        n_shed = len(self._q) - max(0, int(keep))
+        if n_shed <= 0:
+            return []
+        order = sorted(range(len(self._q)),
+                       key=lambda i: (self._q[i].priority,
+                                      -self._q[i].arrival_time, -i))
+        victims = set(order[:n_shed])
+        out = [self._q[i] for i in sorted(victims)]
+        self._q = deque(r for i, r in enumerate(self._q)
+                        if i not in victims)
+        return out
 
     def next_arrival(self) -> Optional[float]:
         return min(r.arrival_time for r in self._q) if self._q else None

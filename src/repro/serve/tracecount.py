@@ -1,0 +1,37 @@
+"""Trace-event counters for the serving fast path.
+
+``note_trace(name)`` is called from *inside* the raw (unjitted) bodies of
+the engine's decode/prefill programs, so it executes exactly once per JAX
+trace — i.e. once per compilation of a new (param-structure, shape)
+variant — and never at run time.  Tests use the counter deltas to prove
+the SLO control loop's tier switches are recompile-free after
+``ServeEngine.warm_tiers``: a tier swap is a pytree pointer swap into an
+already-compiled program, so serving across tier switches must not move
+these counters at all.
+
+A dedicated leaf module (rather than a counter on ``serve/engine.py``)
+because both ``serve/cache.py`` (slot prefill) and ``serve/engine.py``
+(decode/chunk programs) record events, and cache must not import engine.
+"""
+
+from __future__ import annotations
+
+import collections
+
+__all__ = ["note_trace", "trace_events", "reset_trace_events"]
+
+_TRACE_EVENTS: collections.Counter = collections.Counter()
+
+
+def note_trace(name: str) -> None:
+    """Record one trace of the named serve program (trace-time only)."""
+    _TRACE_EVENTS[name] += 1
+
+
+def trace_events() -> dict:
+    """{program name: times traced} for this process."""
+    return dict(_TRACE_EVENTS)
+
+
+def reset_trace_events() -> None:
+    _TRACE_EVENTS.clear()

@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.tune import routing
-from repro.tune.table import TuningTable, shape_key
+from repro.tune.table import TuningTable, bucket, shape_key
 
 __all__ = [
     "time_us",
@@ -155,7 +155,14 @@ def tune_decode_threshold(table: TuningTable, *, K: int, R: int, fmt: tuple,
     """Measure the gemv/spmm crossover for one (shape bucket, format) and
     record it as that bucket's ``decode_m_max``.  ``t`` optionally
     supplies an existing (unbatched) tensor to sweep in place of the
-    random probe the shape parameters otherwise build."""
+    random probe the shape parameters otherwise build.
+
+    The same sweep also yields absolute numbers, so each swept width's
+    best-path latency is recorded as the bucket's
+    ``matmul_latency/.../M{bucket}`` entry (best over the M values that
+    share a bucket) — the admission-time cost predictions the serving SLO
+    controller reads back through
+    :func:`repro.tune.routing.matmul_latency_us`."""
     key = jax.random.PRNGKey(0) if key is None else key
     if t is None:
         t = _probe_tensor(key, K, R, fmt, gr, dtype=dtype)
@@ -164,6 +171,18 @@ def tune_decode_threshold(table: TuningTable, *, K: int, R: int, fmt: tuple,
     crossover = measured_crossover(records)
     table.put(shape_key("decode_m_max", K=K, R=R, fmt=fmt, gr=gr,
                         dtype=dtype), crossover)
+    best_by_m: dict = {}
+    for r in records:
+        m = int(r["M"])
+        best_by_m[m] = min(best_by_m.get(m, float("inf")), r["us"])
+    lat_key = shape_key("matmul_latency", K=K, R=R, fmt=fmt, gr=gr,
+                        dtype=dtype)
+    best_by_bucket: dict = {}
+    for m, us in best_by_m.items():
+        b = bucket(m)
+        best_by_bucket[b] = min(best_by_bucket.get(b, float("inf")), us)
+    for b, us in best_by_bucket.items():
+        table.put(f"{lat_key}/M{b}", us)
     return crossover
 
 

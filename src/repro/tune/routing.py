@@ -41,7 +41,7 @@ import sys
 import warnings
 from typing import Optional
 
-from repro.tune.table import TuningTable, shape_key
+from repro.tune.table import TuningTable, bucket, shape_key
 
 __all__ = [
     "DEFAULT_DECODE_M_MAX",
@@ -64,6 +64,7 @@ __all__ = [
     "fused_qkv",
     "fused_ffn",
     "conversion_cost",
+    "matmul_latency_us",
 ]
 
 #: widest right operand still considered decode-shaped when no table is
@@ -289,6 +290,22 @@ def fused_ffn(*, K: int, R: int, fmt: tuple, gr: int, dtype
     if val is None:
         val, src = _lookup("fused_ffn", DEFAULT_FUSED_FFN)
     return bool(val), src
+
+
+def matmul_latency_us(*, K: int, R: int, fmt: tuple, gr: int, dtype,
+                      M: int) -> tuple[Optional[float], str]:
+    """Measured best-path latency (us) of one routed sparse matmul at
+    right-operand width ``M`` for this shape bucket, or None when the
+    active table has no measurement (there is no meaningful shipped
+    default for an absolute latency — callers fall back to online
+    observation).  Recorded by ``tune_decode_threshold`` from the same
+    gemv/spmm sweep that sets the bucket's crossover; the serving SLO
+    controller's admission-time cost prediction
+    (``serve/slo.py:LatencyModel``) is the consumer."""
+    key = (shape_key("matmul_latency", K=K, R=R, fmt=fmt, gr=gr,
+                     dtype=dtype) + f"/M{bucket(M)}")
+    val, src = _lookup(key, None)
+    return (None if val is None else float(val)), src
 
 
 def conversion_cost(src_cls: type, dst_cls: type) -> Optional[float]:

@@ -33,6 +33,8 @@ from typing import Any, Optional
 
 import jax
 
+from repro.ioutil import atomic_write_json
+
 __all__ = [
     "SCHEMA_VERSION",
     "TuningTable",
@@ -144,14 +146,7 @@ class TuningTable:
             "meta": self.meta,
             "entries": self.entries,
         }
-        tmp = f"{path}.{os.getpid()}.tmp"
-        try:
-            with open(tmp, "w") as f:
-                json.dump(doc, f, indent=2, sort_keys=True)
-            os.replace(tmp, path)
-        finally:
-            if os.path.exists(tmp):
-                os.remove(tmp)
+        atomic_write_json(path, doc, sort_keys=True)
 
     def merge(self, other: "TuningTable") -> None:
         """Adopt ``other``'s entries (other wins on conflicts)."""

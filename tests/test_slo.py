@@ -1,0 +1,417 @@
+"""SLO control-loop tests: tier specs, the cadence watchdog, hysteresis
+over the degradation ladder, priority/deadline scheduling and shedding in
+the queue, the typed serve-error family, SLO metrics, atomic JSON writes,
+and the recompile-free tier-switch guarantee (trace counters stay flat
+across ``set_tier`` after ``warm_tiers``)."""
+
+import dataclasses
+import json
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.ioutil import atomic_write_json
+from repro.models import init_lm
+from repro.serve import (
+    CadenceWatchdog,
+    DeadlineExceededError,
+    EngineOverloadError,
+    LatencyModel,
+    PromptTooLongError,
+    Request,
+    RequestOutput,
+    RequestQueue,
+    ServeEngine,
+    ServeError,
+    SLOConfig,
+    SLOController,
+    TierSpec,
+    build_tiers,
+    raise_for_output,
+    summarize,
+    trace_events,
+)
+from repro.tune import routing
+from repro.tune.table import TuningTable, bucket, shape_key
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = dataclasses.replace(get_smoke("bert-base-sten"), dtype="float32")
+    params = init_lm(KEY, cfg)
+    yield cfg, params
+    from repro.serve import cache as _cache, engine as _engine
+    for mod in (_cache, _engine):
+        for fn in vars(mod).values():
+            clear = getattr(fn, "cache_clear", None)
+            if clear is not None:
+                clear()
+    jax.clear_caches()
+
+
+def make_prompt(length, seed=0, vocab=512):
+    return np.asarray(jax.random.randint(
+        jax.random.PRNGKey(seed), (length,), 0, vocab, jnp.int32
+    ))
+
+
+# ---------------------------------------------------------------------------
+# tier specs
+# ---------------------------------------------------------------------------
+
+
+def test_tier_spec_parse():
+    d = TierSpec.parse("dense")
+    assert d.fmt is None and d.density == 1.0 and d.name == "dense"
+    nm = TierSpec.parse("2:4")
+    assert nm.fmt == (2, 4, 4) and nm.gr == 64 and nm.density == 0.5
+    g = TierSpec.parse("1:4:8-gr32")
+    assert g.fmt == (1, 4, 8) and g.gr == 32
+    assert g.name == "1:4:8-gr32" and g.density == 0.25
+
+
+@pytest.mark.parametrize("bad", ["4:2", "0:4", "1:4:2", "junk", "1:2:3:4"])
+def test_tier_spec_parse_rejects(bad):
+    with pytest.raises(ValueError):
+        TierSpec.parse(bad)
+
+
+def test_build_tiers_rejects_empty_and_duplicates(setup):
+    cfg, params = setup
+    with pytest.raises(ValueError, match="at least one"):
+        build_tiers(params, [])
+    with pytest.raises(ValueError, match="duplicate"):
+        build_tiers(params, ["dense", "dense"])
+
+
+# ---------------------------------------------------------------------------
+# cadence watchdog
+# ---------------------------------------------------------------------------
+
+
+def test_cadence_watchdog_trips_on_sustained_slowdown():
+    wd = CadenceWatchdog(window=4, n_windows=6, min_windows=3, ratio=2.0)
+    for _ in range(3 * 4):           # three healthy windows at 1ms
+        wd.observe(1e-3)
+    assert not wd.slow()
+    for _ in range(4):               # one collapsed window at 10ms
+        wd.observe(10e-3)
+    assert wd.slow()
+    assert wd.recent() == pytest.approx(10e-3)
+
+
+def test_cadence_watchdog_ignores_single_token_jitter():
+    wd = CadenceWatchdog(window=4, n_windows=6, min_windows=3, ratio=2.0)
+    for i in range(4 * 4):
+        # one 50ms spike per window; the window median stays 1ms
+        wd.observe(50e-3 if i % 4 == 0 else 1e-3)
+    assert not wd.slow()
+
+
+def test_cadence_watchdog_silent_before_min_windows():
+    wd = CadenceWatchdog(window=2, n_windows=4, min_windows=3, ratio=2.0)
+    wd.observe(1e-3), wd.observe(1e-3)   # 1 window
+    wd.observe(99.0), wd.observe(99.0)   # 2 windows, still below min
+    assert not wd.slow()
+
+
+# ---------------------------------------------------------------------------
+# hysteresis controller
+# ---------------------------------------------------------------------------
+
+
+def _controller(**over):
+    kw = dict(tpot_ms=10.0, escalate_dwell=2, deescalate_dwell=3)
+    kw.update(over)
+    return SLOController(SLOConfig(**kw), n_tiers=2, max_slots=4)
+
+
+def test_controller_escalates_after_dwell_and_maps_ladder():
+    c = _controller()
+    deep = c.queue_high() + 1
+    assert c.begin_step(0.0, deep) == 0          # hot streak 1
+    assert c.begin_step(0.0, deep) == 1          # dwell reached
+    assert c.tier_index == 0                     # level 1: still tier 0
+    assert c.admission_budget(3) == 1            # deferred admissions
+    assert c.decode_chunk(8) == 4                # shrunk chunk
+    c.begin_step(0.0, deep), c.begin_step(0.0, deep)
+    assert c.level == 2 and c.tier_index == 1    # sparser tier
+    c.begin_step(0.0, deep), c.begin_step(0.0, deep)
+    assert c.level == 3 and c.should_shed(deep)
+    assert c.tier_index == 1                     # clamped to the ladder
+    assert c.counters["escalations"] == 3
+
+
+def test_controller_needs_queue_to_shed():
+    # hot via the watchdog (cadence collapse) but with an *empty* queue:
+    # the ladder stops at level 2 — shedding nothing buys nothing
+    c = _controller(watchdog_window=2, watchdog_n_windows=4,
+                    watchdog_min_windows=2, watchdog_ratio=2.0)
+    for _ in range(6):
+        c.observe_decode(1e-3, 1)
+    for _ in range(2):
+        c.observe_decode(1.0, 1)                 # latest window collapsed
+    for _ in range(10):
+        c.begin_step(0.0, 0)
+    assert c.level == 2
+    assert not c.should_shed(0)
+
+
+def test_controller_deescalates_slowly_and_band_holds():
+    c = _controller()
+    deep = c.queue_high() + 1
+    for _ in range(4):
+        c.begin_step(0.0, deep)
+    assert c.level == 2
+    c.begin_step(0.0, 0)                         # cool streak 1
+    c.begin_step(0.0, 0)                         # 2
+    assert c.level == 2                          # dwell=3 not yet reached
+    c.begin_step(0.0, 0)
+    assert c.level == 1
+    assert c.counters["deescalations"] == 1
+    # a hot step resets the cool streak
+    c.begin_step(0.0, 0), c.begin_step(0.0, 0)
+    c.begin_step(0.0, deep)
+    c.begin_step(0.0, 0), c.begin_step(0.0, 0)
+    assert c.level == 1
+
+
+def test_controller_watchdog_trip_is_hot():
+    c = _controller(watchdog_window=2, watchdog_n_windows=4,
+                    watchdog_min_windows=2, watchdog_ratio=2.0)
+    for _ in range(6):
+        c.observe_decode(1e-3, 1)
+    for _ in range(2):
+        c.observe_decode(1.0, 1)                 # cadence collapse
+    c.begin_step(0.0, 0), c.begin_step(0.0, 0)
+    assert c.counters["watchdog_trips"] >= 1
+    assert c.level == 1
+
+
+# ---------------------------------------------------------------------------
+# latency model + tuning-table seeding
+# ---------------------------------------------------------------------------
+
+
+def test_latency_model_ewma_and_dense_fallback(setup):
+    cfg, params = setup
+    lm = LatencyModel(params, cfg, max_slots=4)   # dense: no sparse leaves
+    assert lm.table_step_s(4) is None
+    assert math.isnan(lm.tpot_s())
+    lm.observe_step(0.08, 8)
+    assert lm.tpot_s() == pytest.approx(0.01)
+    lm.observe_prefill(16, 0.2)
+    assert lm.prefill_s(16) == pytest.approx(0.2)
+    # same bucket: plen 12 shares bucket(12)=16
+    assert lm.prefill_s(12) == pytest.approx(0.2)
+    assert lm.request_s(16, 10) == pytest.approx(0.2 + 10 * 0.01)
+
+
+def test_latency_model_seeds_from_table(setup):
+    cfg, params = setup
+    tiers = build_tiers(params, ["1:4:8-gr64"])
+    lm = LatencyModel(tiers[0].params, cfg, max_slots=4)
+    assert lm._weights                            # sparse leaves found
+    # no table -> no prediction (matmul_latency has no shipped default)
+    assert lm.table_step_s(4) is None
+    table = TuningTable.for_device()
+    for ctx, _mult in lm._weights:
+        key = shape_key("matmul_latency", **ctx) + f"/M{bucket(4)}"
+        table.put(key, 100.0)                     # 100us per matmul
+    routing.set_active_table(table)
+    want = 1e-4 * sum(m for _, m in lm._weights)
+    assert lm.table_step_s(4) == pytest.approx(want)
+    assert lm.tpot_s() == pytest.approx(want)     # table seeds cold start
+    lm.observe_step(0.5, 1)
+    assert lm.tpot_s() == pytest.approx(0.5)      # observation takes over
+
+
+def test_matmul_latency_us_lookup_and_default():
+    kw = dict(K=256, R=512, fmt=(1, 4, 8), gr=64, dtype="float32")
+    us, src = routing.matmul_latency_us(M=4, **kw)
+    assert us is None and src == "default"
+    table = TuningTable.for_device()
+    table.put(shape_key("matmul_latency", **kw) + f"/M{bucket(4)}", 37.5)
+    routing.set_active_table(table)
+    us, src = routing.matmul_latency_us(M=3, **kw)   # bucket(3) == 4
+    assert us == 37.5 and src == "table"
+
+
+# ---------------------------------------------------------------------------
+# queue: priorities, deadlines, shedding
+# ---------------------------------------------------------------------------
+
+
+def _req(uid, *, prio=0, t=0.0, deadline=None):
+    return Request(uid=uid, prompt=np.array([1, 2, 3]), max_new_tokens=4,
+                   arrival_time=t, priority=prio, deadline_s=deadline)
+
+
+def test_pop_ready_prefers_priority_then_deadline():
+    q = RequestQueue()
+    q.push(_req(0, prio=0))
+    q.push(_req(1, prio=2, deadline=9.0))
+    q.push(_req(2, prio=2, deadline=1.0))
+    q.push(_req(3, prio=1))
+    assert q.pop_ready(0.0).uid == 2    # highest prio, earliest deadline
+    assert q.pop_ready(0.0).uid == 1
+    assert q.pop_ready(0.0).uid == 3
+    assert q.pop_ready(0.0).uid == 0
+
+
+def test_expired_removes_past_deadline_only():
+    q = RequestQueue()
+    q.push(_req(0, t=0.0, deadline=1.0))
+    q.push(_req(1, t=0.0, deadline=5.0))
+    q.push(_req(2, t=0.0))
+    dead = q.expired(2.0)
+    assert [r.uid for r in dead] == [0]
+    assert len(q) == 2
+
+
+def test_shed_drops_lowest_priority_newest_first():
+    q = RequestQueue()
+    q.push(_req(0, prio=1, t=0.0))
+    q.push(_req(1, prio=0, t=1.0))
+    q.push(_req(2, prio=0, t=2.0))
+    q.push(_req(3, prio=2, t=3.0))
+    victims = q.shed(keep=2)
+    assert sorted(r.uid for r in victims) == [1, 2]   # the prio-0 pair
+    # within a priority the newest sheds first
+    assert victims[0].uid in (1, 2)
+    q2 = RequestQueue()
+    for uid, t in ((0, 0.0), (1, 1.0), (2, 2.0)):
+        q2.push(_req(uid, prio=0, t=t))
+    assert {r.uid for r in q2.shed(keep=2)} == {2}
+    assert q2.shed(keep=5) == []
+
+
+# ---------------------------------------------------------------------------
+# typed error family
+# ---------------------------------------------------------------------------
+
+
+def test_error_family_shape():
+    from repro.serve import InjectedFaultError
+    assert issubclass(PromptTooLongError, ServeError)
+    assert issubclass(PromptTooLongError, ValueError)   # compat spelling
+    assert issubclass(DeadlineExceededError, ServeError)
+    assert issubclass(EngineOverloadError, ServeError)
+    assert not issubclass(InjectedFaultError, ServeError)
+
+
+def test_raise_for_output():
+    def out(reason):
+        return RequestOutput(uid=1, prompt_len=3, tokens=[],
+                             finish_reason=reason, arrival_time=0.0,
+                             admitted_time=float("nan"), finish_time=1.0,
+                             token_times=[])
+    with pytest.raises(EngineOverloadError):
+        raise_for_output(out("shed"))
+    with pytest.raises(DeadlineExceededError):
+        raise_for_output(out("timeout"))
+    with pytest.raises(PromptTooLongError):
+        raise_for_output(out("rejected"))
+    raise_for_output(out("length"))     # served: no-op
+
+
+def test_submit_raises_typed_errors(setup):
+    cfg, params = setup
+    eng = ServeEngine(params, cfg, max_slots=2, max_seq_len=16,
+                      max_queue=1)
+    with pytest.raises(PromptTooLongError):
+        eng.submit(Request(uid=0, prompt=make_prompt(20, vocab=cfg.vocab),
+                           max_new_tokens=4))
+    eng.submit(Request(uid=1, prompt=make_prompt(4, vocab=cfg.vocab),
+                       max_new_tokens=4, arrival_time=99.0))
+    with pytest.raises(EngineOverloadError):
+        eng.submit(Request(uid=2, prompt=make_prompt(4, vocab=cfg.vocab),
+                           max_new_tokens=4, arrival_time=99.0))
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+
+def _served(uid, t0=0.0):
+    return RequestOutput(uid=uid, prompt_len=4, tokens=[1, 2, 3],
+                         finish_reason="length", arrival_time=t0,
+                         admitted_time=t0 + 0.01, finish_time=t0 + 0.05,
+                         token_times=[t0 + 0.02, t0 + 0.03, t0 + 0.05])
+
+
+def test_summarize_counts_unserved_and_attainment():
+    outs = [
+        _served(0),
+        RequestOutput(uid=1, prompt_len=4, tokens=[], finish_reason="shed",
+                      arrival_time=0.0, admitted_time=float("nan"),
+                      finish_time=0.5, token_times=[]),
+        RequestOutput(uid=2, prompt_len=4, tokens=[],
+                      finish_reason="timeout", arrival_time=0.0,
+                      admitted_time=float("nan"), finish_time=0.5,
+                      token_times=[]),
+    ]
+    met = summarize(outs, wall_time=1.0, slo_tpot_s=1.0)
+    assert met.num_requests == 1          # unserved excluded
+    assert met.num_shed == 1 and met.num_timeout == 1
+    assert met.slo_attainment == pytest.approx(1 / 3)   # unserved miss SLO
+    rep = met.report()
+    assert "shed 1" in rep and "timeout 1" in rep
+    assert "SLO" in rep
+
+
+def test_report_renders_nan_as_dashes():
+    met = summarize([], wall_time=1.0)
+    rep = met.report()
+    assert "--" in rep and "nan" not in rep
+    assert math.isnan(met.slo_attainment)   # no SLO given -> no line
+    assert "SLO" not in rep
+
+
+def test_atomic_write_json(tmp_path):
+    path = os.path.join(tmp_path, "out.json")
+    atomic_write_json(path, {"a": 1})
+    atomic_write_json(path, {"a": 2, "b": [1, 2]})
+    with open(path) as f:
+        assert json.load(f) == {"a": 2, "b": [1, 2]}
+    assert os.listdir(tmp_path) == ["out.json"]   # no tmp litter
+
+
+# ---------------------------------------------------------------------------
+# recompile-free tier switches (the tentpole guarantee)
+# ---------------------------------------------------------------------------
+
+
+def test_tier_switches_are_recompile_free(setup):
+    cfg, params = setup
+    # tiers without a controller: manual set_tier persists (with an SLO
+    # controller attached, the ladder level owns the tier choice and
+    # would swap back to tier 0 while healthy)
+    eng = ServeEngine(params, cfg, max_slots=2, max_seq_len=24,
+                      decode_chunk=4, tiers=["dense", "1:4:8-gr64"])
+    eng.warm_tiers(prompt_lens=(8,))
+    before = dict(trace_events())
+
+    def burst(uids):
+        return [Request(uid=u, prompt=make_prompt(8, seed=u,
+                                                  vocab=cfg.vocab),
+                        max_new_tokens=6) for u in uids]
+
+    outs = eng.run(burst(range(3)))
+    eng.set_tier(1)
+    outs += eng.run(burst(range(3, 6)))
+    eng.set_tier(0)
+    outs += eng.run(burst(range(6, 9)))
+    assert trace_events() == before       # zero retraces after warmup
+    assert eng.stats["tier_switches"] == 2
+    assert all(o.finish_reason == "length" for o in outs)
+    assert eng.tokens_by_tier["dense"] > 0
+    assert eng.tokens_by_tier["1:4:8-gr64"] > 0
