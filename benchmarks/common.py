@@ -4,6 +4,8 @@ import time
 
 import jax
 
+from repro.statutil import fmt, pct  # noqa: F401 — shared with serve.metrics
+
 
 def time_fn(fn, *args, warmup=2, iters=5, **kw):
     """Median wall time (seconds) of a jitted callable."""

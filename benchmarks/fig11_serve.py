@@ -67,9 +67,13 @@ import numpy as np
 from repro.configs import get_smoke
 from repro.ioutil import atomic_write_json
 from repro.models import init_lm
+from repro.obs import trace as obs
+from repro.obs.export import phase_breakdown
+from repro.obs.registry import REGISTRY, snapshot_diff
 from repro.serve import FaultConfig, FaultInjector, Request, \
     SamplingParams, ServeEngine, SLOConfig, burst_arrivals, \
     compare_dense_sparse, sparsify_for_serving, trace_events
+from repro.statutil import pct
 
 disp = importlib.import_module("repro.core.dispatch")
 kops = importlib.import_module("repro.kernels.ops")
@@ -206,7 +210,7 @@ def steady_tpot_p99(outs):
     for o in outs:
         ts = o.token_times
         gaps.extend(b - a for a, b in zip(ts[1:-1], ts[2:]))
-    return float(np.percentile(gaps, 99)) if gaps else float("nan")
+    return pct(gaps, 99)
 
 
 def paged_main(quick=False, out_json=OUT_JSON, shared_prefix_frac=0.97):
@@ -380,7 +384,37 @@ def _warm_plain(params, cfg, *, plens, chunk, ekw):
     ServeEngine(params, cfg, decode_chunk=chunk, **ekw).run(reqs)
 
 
-def slo_main(quick=False, out_json=OUT_JSON, faults=True):
+def _obs_probe(params, cfg, *, ekw, chunk, prompt_lens, gen_len):
+    """Tracing-cost probe: serve one small identical request trace with
+    the flight recorder off, then on, through freshly built plain engines
+    (all programs already compiled by the earlier warmup, so both runs
+    are steady-state).  Returns ``(tokens_identical, p50_overhead,
+    p50_by_mode)`` — greedy decoding plus host-side-only instrumentation
+    make the token streams bitwise-identical by construction, and the
+    acceptance story asserts exactly that.  Each mode takes the best of
+    two runs so the overhead estimate is not one background-load spike."""
+    probe_reqs = poisson_requests(cfg, n_requests=6, rate_hz=50.0,
+                                  prompt_lens=prompt_lens, gen_len=gen_len,
+                                  seed=17)
+    was_on = obs.enabled()
+    toks, p50 = {}, {}
+    for mode in ("off", "on"):
+        (obs.enable if mode == "on" else obs.disable)()
+        best = float("inf")
+        for _ in range(2):
+            eng = ServeEngine(params, cfg, decode_chunk=chunk, **ekw)
+            outs = eng.run(probe_reqs)
+            met = eng.metrics(label=f"obs_{mode}")
+            best = min(best, met.tok_latency_p50)
+        toks[mode] = {o.uid: o.tokens for o in outs}
+        p50[mode] = best
+    (obs.enable if was_on else obs.disable)()
+    overhead = ((p50["on"] - p50["off"]) / p50["off"]
+                if p50["off"] > 0 else float("nan"))
+    return toks["off"] == toks["on"], overhead, p50
+
+
+def slo_main(quick=False, out_json=OUT_JSON, faults=True, trace_path=None):
     """--bursty mode: SLO-controlled engine (adaptive sparsity tiers,
     deferred admissions, load shedding) vs the uncontrolled engine under
     the *same* bursty arrival trace and (with --faults) the same seeded
@@ -449,6 +483,11 @@ def slo_main(quick=False, out_json=OUT_JSON, faults=True):
     disp.reset_dispatch_counters()
     kops.reset_kernel_counters()
     ekw = dict(max_slots=max_slots, max_seq_len=max_seq)
+    if trace_path:
+        # on before any compile: the trace then carries the kernel-route
+        # and jit-trace events the dispatch/kernel registries emit at
+        # trace time, alongside the serving lifecycle spans
+        obs.enable()
 
     # -- calibration: what does "healthy" look like on this host? ---------
     # Moderate (non-overloaded) load on the same engine and the same
@@ -479,12 +518,15 @@ def slo_main(quick=False, out_json=OUT_JSON, faults=True):
                        **ekw)
     ctrl.warm_tiers(prompt_lens=prompt_lens)
     traces_before = trace_events()
+    reg_before = REGISTRY.snapshot()
     ctrl_outs = ctrl.run(reqs)
+    reg_diff = snapshot_diff(reg_before, REGISTRY.snapshot())
     traces_after = trace_events()
     recompiled = {k: traces_after[k] - traces_before.get(k, 0)
                   for k in traces_after
                   if traces_after[k] != traces_before.get(k, 0)}
     if recompiled:
+        obs.postmortem("fig11_recompile_after_warm_tiers")
         raise SystemExit(
             "fig11_serve --bursty: the controlled engine recompiled after "
             f"warm_tiers (trace deltas: {recompiled}) — tier switches "
@@ -504,10 +546,16 @@ def slo_main(quick=False, out_json=OUT_JSON, faults=True):
 
     fallbacks = _fallback_traces()
     if fallbacks:
+        obs.postmortem("fig11_dense_fallback")
         raise SystemExit(
             "fig11_serve --bursty: sparse tier traced through the dense "
             f"fallback: {fallbacks}"
         )
+
+    # -- tracing cost + equivalence: same trace, recorder off vs on -------
+    tokens_equal, obs_overhead, obs_p50 = _obs_probe(
+        params, cfg, ekw=ekw, chunk=base_chunk, prompt_lens=prompt_lens,
+        gen_len=gen_short)
 
     print("mode,served,shed,timeout,steady_p99_ms,p99_over_slo")
     for label, met, p99, stats in (
@@ -527,6 +575,9 @@ def slo_main(quick=False, out_json=OUT_JSON, faults=True):
     gates = {
         "controlled_p99_within_slo": bool(ctrl_p99 <= slo_s),
         "shed_rate_below_max": bool(shed_rate < SHED_RATE_MAX),
+        # greedy decode + host-side-only instrumentation: recording the
+        # flight of a request must never change its tokens
+        "token_equivalence_tracing": bool(tokens_equal),
     }
     if faults:
         # the >= 2x-SLO overload contrast is the *fault-injected* story
@@ -570,16 +621,43 @@ def slo_main(quick=False, out_json=OUT_JSON, faults=True):
         "recompile_free_after_warmup": True,
         "gates": gates,
     }
+    obs_section = {
+        "traced": bool(trace_path),
+        "trace_path": trace_path,
+        "trace_events": len(obs.records()),
+        "dropped_records": obs.dropped(),
+        # wall-clock accounting of the controlled run by span name (plus
+        # the probe's own spans when --trace is on)
+        "phase_breakdown": phase_breakdown(obs.records()),
+        # registry deltas across exactly the controlled run: engine
+        # scheduler counters, SLO decisions, injected faults, jit traces
+        "registry_diff_controlled": reg_diff,
+        # end-of-run state of every registered instrument (all modes)
+        "registry": REGISTRY.snapshot(),
+        "token_equivalence_tracing": bool(tokens_equal),
+        "decode_p50_overhead_tracing": obs_overhead,
+        "probe_tok_p50_ms": {m: v * 1e3 for m, v in obs_p50.items()},
+    }
     try:
         with open(out_json) as f:
             payload = json.load(f)
     except (FileNotFoundError, json.JSONDecodeError):
         payload = {"benchmark": "fig11_serve"}
     payload["slo"] = section
+    payload["obs"] = obs_section
     atomic_write_json(out_json, payload)
     print(f"wrote {out_json}")
+    if trace_path:
+        obs.dump(trace_path, registry_snapshot=REGISTRY.snapshot())
+        print(f"wrote {trace_path} ({len(obs.records())} events, "
+              f"{obs.dropped()} dropped) — open in ui.perfetto.dev")
+    print(f"obs: tracing tok_p50 overhead "
+          f"{obs_overhead:+.1%} (off {obs_p50['off'] * 1e3:.2f} ms, "
+          f"on {obs_p50['on'] * 1e3:.2f} ms), tokens identical: "
+          f"{tokens_equal}")
     failed = [k for k, ok in gates.items() if not ok]
     if failed:
+        obs.postmortem("fig11_slo_gates_failed")
         raise SystemExit(
             f"fig11_serve --bursty: SLO gates failed: {failed} "
             f"(slo={slo_s * 1e3:.1f}ms controlled={ctrl_p99 * 1e3:.1f}ms "
@@ -688,7 +766,7 @@ def main(quick=False, out_json=OUT_JSON, table=None):
             prev = json.load(f)
     except (FileNotFoundError, json.JSONDecodeError):
         prev = {}
-    for section in ("paged", "slo"):
+    for section in ("paged", "slo", "obs"):
         if section in prev:
             # --paged / --bursty results live in their own sections; a
             # dense-vs-sparse rerun refreshes its numbers without
@@ -720,13 +798,21 @@ if __name__ == "__main__":
                     help="with --bursty, inject the seeded fault schedule "
                          "(latency spikes, slow-decode windows, transient "
                          "errors, admission delays) into both engines")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="with --bursty, export the run's flight recorder "
+                         "as Chrome/Perfetto trace JSON (request lifecycle "
+                         "spans, controller decisions, fault injections, "
+                         "kernel routes) — open in ui.perfetto.dev")
     args = ap.parse_args()
     if args.faults and not args.bursty:
         ap.error("--faults requires --bursty")
+    if args.trace and not args.bursty:
+        ap.error("--trace requires --bursty")
     if args.bursty and args.paged:
         ap.error("--bursty and --paged are separate modes")
     if args.bursty:
-        slo_main(quick=args.quick, faults=args.faults)
+        slo_main(quick=args.quick, faults=args.faults,
+                 trace_path=args.trace)
     elif args.paged:
         paged_main(quick=args.quick,
                    shared_prefix_frac=args.shared_prefix_frac)

@@ -27,7 +27,6 @@ skips the separate inline-sparsifier application.
 
 from __future__ import annotations
 
-import collections
 import dataclasses
 import itertools
 import warnings
@@ -40,6 +39,7 @@ import importlib
 
 # module object import (the package re-exports a function named ``convert``)
 conv = importlib.import_module("repro.core.convert")
+from repro.obs import registry as _obs_registry
 from repro.core.layouts import DenseTensor, SparsityLayout
 from repro.core.sparsifiers import (
     KeepAll,
@@ -84,7 +84,14 @@ _PATCHED: dict[Callable, str] = {}
 # *trace* time, so these count compilations, not calls — which is exactly
 # the no-fallback evidence the serving perf smoke wants ("did any
 # projection in this run trace through the dense fallback?").
-_DISPATCH_COUNTS: collections.Counter = collections.Counter()
+# The store is a ``repro.obs`` registry family (a Counter subclass), so it
+# lands in the unified telemetry snapshot and — when the flight recorder
+# is enabled — each dispatch decision becomes a timestamped event on the
+# kernel track.  Increment/copy/clear semantics are unchanged.
+_DISPATCH_COUNTS = _obs_registry.REGISTRY.family(
+    "dispatch",
+    help="trace-time dispatch outcomes: (outcome, op, layout signature)",
+    trace_as="dispatch", track="kernel")
 
 
 def dispatch_counters() -> dict:

@@ -36,13 +36,13 @@ count compilations, not calls).
 
 from __future__ import annotations
 
-import collections
 import functools
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.layouts import GroupedNMTensor
+from repro.obs.registry import REGISTRY as _REGISTRY
 from repro.kernels import ref as kref
 from repro.tune import routing
 from repro.kernels.fused_sparse_matmul import matmul_threshold_pallas
@@ -92,8 +92,15 @@ DECODE_M_MAX = routing.DEFAULT_DECODE_M_MAX
 #: ``spmm_block_elems`` table entries
 _SPMM_BLOCK_ELEMS = routing.DEFAULT_SPMM_BLOCK_ELEMS
 
-# (kernel, path) -> number of traces routed there
-_KERNEL_COUNTS: collections.Counter = collections.Counter()
+# (kernel, path) -> number of traces routed there.  A ``repro.obs``
+# registry family: same Counter semantics at every call site, but the
+# counts join the unified telemetry snapshot and each routing decision
+# becomes a timestamped ``kernel_route`` event on the kernel track when
+# the flight recorder is enabled.
+_KERNEL_COUNTS = _REGISTRY.family(
+    "kernel_routes",
+    help="trace-time kernel routing: (kernel, path) -> traces",
+    trace_as="kernel_route", track="kernel")
 
 
 def kernel_counters() -> dict:
@@ -128,9 +135,11 @@ def nmg_spmm(a: GroupedNMTensor, b: jnp.ndarray, *, use_pallas: bool | None = No
         cfg, src = routing.spmm_pallas_config(**_route_ctx(a, b.dtype))
         sched = "stream" if cfg["stream"] else "grid"
         _KERNEL_COUNTS[("nmg_spmm_pallas", f"{sched}[{src}]")] += 1
-        return nmg_spmm_pallas(a, b, interpret=not on_tpu(), tn=cfg["tn"],
-                               target_depth=cfg["target_depth"],
-                               stream=cfg["stream"])
+        with jax.named_scope(f"repro.nmg_spmm_pallas[{sched}]"):
+            return nmg_spmm_pallas(a, b, interpret=not on_tpu(),
+                                   tn=cfg["tn"],
+                                   target_depth=cfg["target_depth"],
+                                   stream=cfg["stream"])
     return nmg_spmm_xla(a, b)
 
 
@@ -219,10 +228,11 @@ def nmg_gemv(a: GroupedNMTensor, b: jnp.ndarray, *, out_dtype=None,
     _KERNEL_COUNTS[("nmg_gemv", "pallas" if use_pallas else "xla")] += 1
     if use_pallas:
         cfg, _ = routing.gemv_pallas_config(**_route_ctx(a, b.dtype))
-        out = nmg_gemv_pallas(a, b, out_dtype=out_dtype,
-                              interpret=not on_tpu(),
-                              tm=cfg["tm"],
-                              target_depth=cfg["target_depth"])
+        with jax.named_scope("repro.nmg_gemv_pallas"):
+            out = nmg_gemv_pallas(a, b, out_dtype=out_dtype,
+                                  interpret=not on_tpu(),
+                                  tm=cfg["tm"],
+                                  target_depth=cfg["target_depth"])
         return out.T if transpose_out else out
     return nmg_gemv_xla(a, b, out_dtype=out_dtype,
                         transpose_out=transpose_out)
@@ -318,9 +328,10 @@ def nmg_qkv(ws, b: jnp.ndarray, *, out_dtype=None,
     _KERNEL_COUNTS[("nmg_qkv", "pallas" if use_pallas else "xla")] += 1
     if use_pallas:
         cfg, _ = routing.gemv_pallas_config(**_fused_ctx(ws, b.dtype))
-        outs = nmg_qkv_pallas(tuple(ws), b, out_dtype=out_dtype,
-                              interpret=not on_tpu(), tm=cfg["tm"],
-                              target_depth=cfg["target_depth"])
+        with jax.named_scope("repro.nmg_qkv_pallas"):
+            outs = nmg_qkv_pallas(tuple(ws), b, out_dtype=out_dtype,
+                                  interpret=not on_tpu(), tm=cfg["tm"],
+                                  target_depth=cfg["target_depth"])
         return tuple(o.T for o in outs) if transpose_out else outs
     return nmg_qkv_xla(tuple(ws), b, out_dtype=out_dtype,
                        transpose_out=transpose_out)
@@ -351,9 +362,10 @@ def nmg_ffn(w: GroupedNMTensor, b: jnp.ndarray, *, act: str = "silu",
     _KERNEL_COUNTS[("nmg_ffn", "pallas" if use_pallas else "xla")] += 1
     if use_pallas:
         cfg, _ = routing.gemv_pallas_config(**_route_ctx(w, b.dtype))
-        out = nmg_ffn_pallas(w, b, act=act, out_dtype=out_dtype,
-                             interpret=not on_tpu(), tm=cfg["tm"],
-                             target_depth=cfg["target_depth"])
+        with jax.named_scope("repro.nmg_ffn_pallas"):
+            out = nmg_ffn_pallas(w, b, act=act, out_dtype=out_dtype,
+                                 interpret=not on_tpu(), tm=cfg["tm"],
+                                 target_depth=cfg["target_depth"])
         return out.T if transpose_out else out
     return nmg_ffn_xla(w, b, act=act, out_dtype=out_dtype,
                        transpose_out=transpose_out)
@@ -570,7 +582,8 @@ def nm_mask(x: jnp.ndarray, n: int, m: int, *, use_pallas: bool | None = None
     shape = x.shape
     x2 = x.reshape(-1, shape[-1])
     if use_pallas:
-        mask = nm_mask_pallas(x2, n, m, interpret=not on_tpu())
+        with jax.named_scope("repro.nm_mask_pallas"):
+            mask = nm_mask_pallas(x2, n, m, interpret=not on_tpu())
         return mask.astype(jnp.bool_).reshape(shape)
     return kref.nm_mask_ref(x2, n, m).reshape(shape)
 
@@ -581,9 +594,10 @@ def matmul_threshold(a, b, threshold: float, *, use_pallas: bool | None = None):
     if use_pallas is None:
         use_pallas = on_tpu()
     if use_pallas:
-        val, mask = matmul_threshold_pallas(
-            a, b, threshold=threshold, interpret=not on_tpu()
-        )
+        with jax.named_scope("repro.matmul_threshold_pallas"):
+            val, mask = matmul_threshold_pallas(
+                a, b, threshold=threshold, interpret=not on_tpu()
+            )
         return val, mask.astype(jnp.bool_)
     val, mask = kref.matmul_threshold_ref(a, b, threshold)
     return val, mask

@@ -28,6 +28,8 @@ import numpy as np
 
 from repro.configs import get_arch, get_smoke
 from repro.models import decode_step, init_lm, prefill
+from repro.obs import trace as obs
+from repro.obs.registry import REGISTRY
 from repro.serve import Request, SamplingParams, compare_dense_sparse
 from repro.serve.engine import ServeEngine, sparsify_for_serving, \
     warmup_engine
@@ -235,6 +237,12 @@ def main(argv=None):
                     help="run the repro.check static verifier over the "
                          "serve entry before doing anything; abort on "
                          "ERROR diagnostics")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="enable the repro.obs flight recorder and write "
+                         "a Chrome/Perfetto trace (request lifecycles, "
+                         "controller decisions, fault injections, kernel "
+                         "routes) to PATH on exit; open it at "
+                         "https://ui.perfetto.dev")
     args = ap.parse_args(argv)
     if args.paged and not args.engine:
         ap.error("--paged requires --engine (the one-shot path has no "
@@ -275,6 +283,17 @@ def main(argv=None):
     key = jax.random.PRNGKey(args.seed)
     params = init_lm(key, cfg)
 
+    if args.trace:
+        obs.enable()
+    try:
+        return _main_modes(args, cfg, params, key)
+    finally:
+        if args.trace:
+            obs.dump(args.trace, registry_snapshot=REGISTRY.snapshot())
+            print(f"wrote trace to {args.trace}")
+
+
+def _main_modes(args, cfg, params, key) -> int:
     if args.engine:
         return _run_engine(args, cfg, params, key)
 

@@ -43,6 +43,8 @@ from repro.core.sparsifiers import ScalarFractionSparsifier
 from repro.data import DataConfig, SyntheticLMPipeline
 from repro.dist.elastic import StragglerWatchdog
 from repro.models import init_lm, loss_fn
+from repro.obs import trace as obs
+from repro.obs.registry import REGISTRY
 from repro.optim import (
     AdamWConfig,
     GMPSchedule,
@@ -197,6 +199,11 @@ def main(argv=None):
                     help="run the repro.check static verifier over the "
                          "train entry before the first step compiles; "
                          "abort on ERROR diagnostics")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="enable the repro.obs flight recorder and write "
+                         "a Chrome/Perfetto trace (train chunks, GMP "
+                         "recomputes, per-layer sparsity, kernel routes) "
+                         "to PATH on exit")
     args = ap.parse_args(argv)
     # the fast path chunks by --log-every; a non-positive value would spin
     # on zero-step chunks forever (and 0 was a ZeroDivisionError before)
@@ -255,14 +262,50 @@ def main(argv=None):
     interrupted = []
     signal.signal(signal.SIGTERM, lambda *a: interrupted.append(1))
 
+    if args.trace:
+        obs.enable()
     run = _run_host_loop if args.host_loop else _run_fast
-    return run(args, cfg, opt_cfg, gmp, params, opt_state, data, mgr,
-               start_step, watchdog, interrupted)
+    rc = run(args, cfg, opt_cfg, gmp, params, opt_state, data, mgr,
+             start_step, watchdog, interrupted)
+    if args.trace:
+        obs.dump(args.trace, registry_snapshot=REGISTRY.snapshot())
+        print(f"wrote trace to {args.trace}")
+    return rc
 
 
 def _log_line(step, loss, gnorm, dt):
     print(f"step {step:5d} loss {loss:.4f} gnorm {gnorm:.3f} "
           f"({dt:.2f}s/step)", flush=True)
+
+
+def _sparsity_telemetry(params, step: int) -> None:
+    """Per-layer sparsity telemetry on the log cadence (flight recorder
+    only — this syncs mask means to the host, so it must never run in an
+    untraced hot loop).  Each FixedMask leaf becomes a registry gauge and
+    one ``sparsity`` event on the train track; leaves stacked across
+    layers (a leading scan axis) report per-layer means."""
+    if not obs.enabled():
+        return
+    for path, leaf in jax.tree_util.tree_flatten_with_path(
+            params, is_leaf=lambda x: isinstance(x, FixedMaskTensor))[0]:
+        if not isinstance(leaf, FixedMaskTensor):
+            continue
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        mask = np.asarray(leaf.mask)
+        if mask.ndim >= 3:  # stacked layers: per-layer mean over axis 0
+            per_layer = 1.0 - mask.reshape(mask.shape[0], -1).mean(axis=1)
+            for i, s in enumerate(per_layer):
+                REGISTRY.gauge(f"train_sparsity/{name}/layer{i}").set(
+                    float(s))
+            obs.event("sparsity", "train", step=step, weight=name,
+                      mean=round(float(per_layer.mean()), 4),
+                      per_layer=[round(float(s), 4) for s in per_layer])
+        else:
+            s = 1.0 - float(mask.mean())
+            REGISTRY.gauge(f"train_sparsity/{name}").set(s)
+            obs.event("sparsity", "train", step=step, weight=name,
+                      sparsity=round(s, 4))
 
 
 def _interrupt_save(mgr, step, params, opt_state) -> int:
@@ -294,6 +337,8 @@ def _run_fast(args, cfg, opt_cfg, gmp, params, opt_state, data, mgr,
     # retarget for it — apply the schedule's step-``start_step`` recompute
     # once on the host (matches the reference loop's pre-step retarget)
     if gmp and gmp.recompute_at(start_step):
+        obs.event("gmp_recompute", "train", step=start_step,
+                  target=gmp.sparsity_at(start_step), in_jit=False)
         params = retarget_sparsity(params, gmp.sparsity_at(start_step))
 
     # chunk length -> compiled trainer.  Lengths come from a bounded set
@@ -313,13 +358,23 @@ def _run_fast(args, cfg, opt_cfg, gmp, params, opt_state, data, mgr,
             steppers[n] = make_multi_step(cfg, opt_cfg, gmp, n)
 
         t0 = time.time()
-        batches = stack_batches(data, step, end)
-        params, opt_state, metrics = steppers[n](
-            params, opt_state, batches, jnp.int32(step), jnp.int32(args.steps)
-        )
-        # log-cadence flush: the only host<->device sync of the chunk
-        chunk_loss = np.asarray(metrics["loss"])
-        chunk_gnorm = np.asarray(metrics["gnorm"])
+        with obs.span("train_chunk", "train", step0=step, steps=n):
+            batches = stack_batches(data, step, end)
+            params, opt_state, metrics = steppers[n](
+                params, opt_state, batches, jnp.int32(step),
+                jnp.int32(args.steps)
+            )
+            # log-cadence flush: the only host<->device sync of the chunk
+            chunk_loss = np.asarray(metrics["loss"])
+            chunk_gnorm = np.asarray(metrics["gnorm"])
+        if gmp is not None and obs.enabled():
+            # the in-jit lax.cond recomputes this chunk ran, from the same
+            # schedule the traced path consults (events, not measurements)
+            for s in range(step + 1, end):
+                if gmp.recompute_at(s) and s < args.steps:
+                    obs.event("gmp_recompute", "train", step=s,
+                              target=gmp.sparsity_at(s), in_jit=True)
+        _sparsity_telemetry(params, end)
         dt = (time.time() - t0) / n
         watchdog.observe(0, dt)
         losses.extend(float(l) for l in chunk_loss)
@@ -351,13 +406,17 @@ def _run_host_loop(args, cfg, opt_cfg, gmp, params, opt_state, data, mgr,
         # GMP schedule events (outside the jitted step: pattern recomputes
         # change which entries are nonzero, values stay jit-shaped)
         if gmp and gmp.recompute_at(step):
+            obs.event("gmp_recompute", "train", step=step,
+                      target=gmp.sparsity_at(step), in_jit=False)
             params = retarget_sparsity(params, gmp.sparsity_at(step))
 
-        params, opt_state, metrics = train_step(params, opt_state, batch)
+        with obs.span("train_step", "train", step=step):
+            params, opt_state, metrics = train_step(params, opt_state, batch)
         watchdog.observe(0, time.time() - t0)
         losses.append(float(metrics["loss"]))
 
         if step % args.log_every == 0 or step == args.steps - 1:
+            _sparsity_telemetry(params, step)
             _log_line(step, losses[-1], float(metrics["gnorm"]),
                       time.time() - t0)
         if mgr and (step + 1) % args.ckpt_every == 0:

@@ -1,0 +1,34 @@
+"""repro.obs — tracing, flight recorder, and telemetry for the stack.
+
+Three pieces (see ``docs/observability.md`` for the user guide):
+
+* ``repro.obs.trace`` — span/event API over a bounded ring-buffer flight
+  recorder.  Off by default; ``enable()`` to record.
+* ``repro.obs.registry`` — the unified :class:`TelemetryRegistry` that
+  absorbs the dispatch/kernel/engine/trace-event counter stores.
+* ``repro.obs.export`` — Chrome/Perfetto, JSONL, and Prometheus
+  exporters plus schema validation and the phase-breakdown summary.
+
+``python -m repro.obs`` summarizes, converts, or validates a recorded
+trace file.
+"""
+
+from repro.obs.trace import (  # noqa: F401
+    enable, disable, enabled, span, event, complete,
+    records, clear, dropped, dump, postmortem,
+)
+from repro.obs.registry import (  # noqa: F401
+    REGISTRY, TelemetryRegistry, snapshot_diff,
+)
+from repro.obs.export import (  # noqa: F401
+    to_chrome_trace, to_jsonl, prometheus_text,
+    phase_breakdown, validate_chrome_trace,
+)
+
+__all__ = [
+    "enable", "disable", "enabled", "span", "event", "complete",
+    "records", "clear", "dropped", "dump", "postmortem",
+    "REGISTRY", "TelemetryRegistry", "snapshot_diff",
+    "to_chrome_trace", "to_jsonl", "prometheus_text",
+    "phase_breakdown", "validate_chrome_trace",
+]

@@ -42,6 +42,8 @@ from repro.core.layouts import GroupedNMTensor
 from repro.core.sparsifiers import GroupedNMSparsifier
 from repro.models import decode_step, init_cache, prefill
 from repro.models.common import ModelConfig
+from repro.obs import trace as obs
+from repro.obs.registry import REGISTRY, MirroredCounters
 from repro.serve.cache import PagedKVCache, PromptTooLongError, \
     SlotKVCache, paged_commit, paged_view
 from repro.serve.errors import EngineOverloadError, InjectedFaultError, \
@@ -366,10 +368,16 @@ class ServeEngine:
         #: scheduler counters (all zero for the slot cache except
         #: rejected/peak_active): deferred admissions, mid-stream
         #: preemptions, rejected requests, peak concurrently-active slots,
-        #: plus the SLO/fault loop's shed/timeout/retry/tier-switch counts
-        self.stats = {"deferred_admissions": 0, "preemptions": 0,
-                      "rejected": 0, "peak_active": 0, "shed": 0,
-                      "timeout": 0, "fault_retries": 0, "tier_switches": 0}
+        #: plus the SLO/fault loop's shed/timeout/retry/tier-switch counts.
+        #: Reads/writes behave exactly like the plain dict this used to
+        #: be; increases additionally mirror into the telemetry registry
+        #: so a benchmark's registry snapshot includes engine stats.
+        self.stats = MirroredCounters(
+            {"deferred_admissions": 0, "preemptions": 0,
+             "rejected": 0, "peak_active": 0, "shed": 0,
+             "timeout": 0, "fault_retries": 0, "tier_switches": 0},
+            REGISTRY.family("engine_stats",
+                            help="engine scheduler counters"))
         # chunked decode falls back to single-step once a lone slot cannot
         # get a full chunk's pages; cleared when a request finishes (pages
         # freed) — see _ensure_decode_pages
@@ -395,6 +403,14 @@ class ServeEngine:
             self._t0 = self._clock()
         return self._clock() - self._t0
 
+    def _abs(self, rel: float) -> float:
+        """Engine-relative seconds back to the clock's absolute domain —
+        what the flight recorder's retroactive spans take.  (With an
+        injected test clock the absolute values live in that clock's
+        domain, not ``perf_counter``'s; spans stay internally consistent
+        either way.)"""
+        return (self._t0 or 0.0) + rel
+
     # -- request lifecycle ------------------------------------------------
     def submit(self, req: Request) -> None:
         """Enqueue a request, validating it against this engine's capacity
@@ -412,6 +428,11 @@ class ServeEngine:
                 f"least one generated token must fit)"
             )
         if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            obs.event("overload_reject", "engine", uid=req.uid,
+                      queue_depth=len(self.queue))
+            # postmortem: dump the flight recorder before surfacing the
+            # overload, so the timeline leading into it survives the crash
+            obs.postmortem("EngineOverloadError")
             raise EngineOverloadError(
                 f"request {req.uid}: queue is at its bound "
                 f"({self.max_queue}); retry later or raise max_queue"
@@ -426,6 +447,7 @@ class ServeEngine:
             deadline=req.deadline,
         ))
         self.stats["rejected"] += 1
+        obs.event("rejected", f"req:{req.uid}", uid=req.uid)
 
     def _finish_unserved(self, req: Request, now: float,
                          reason: str) -> None:
@@ -439,6 +461,11 @@ class ServeEngine:
             deadline=req.deadline,
         ))
         self.stats[reason] += 1
+        if obs.enabled():
+            obs.complete("queued", self._abs(req.arrival_time),
+                         self._abs(self._now()), f"req:{req.uid}",
+                         uid=req.uid, outcome=reason)
+            obs.event(reason, f"req:{req.uid}", uid=req.uid)
 
     def _admit(self, slot: int, req: Request, now: float) -> bool:
         """Prefill ``req`` into ``slot`` and sample its first token.
@@ -458,6 +485,14 @@ class ServeEngine:
         S = int(req.prompt.size)
         if self._latency is not None:
             self._latency.observe_prefill(S, self._now() - t_pre)
+        if obs.enabled():
+            # the request's lifecycle row: time spent queued (arrival to
+            # admission), then the prefill that admitted it
+            obs.complete("queued", self._abs(req.arrival_time),
+                         self._abs(now), f"req:{req.uid}", uid=req.uid)
+            obs.complete("prefill", self._abs(t_pre),
+                         self._abs(self._now()), f"req:{req.uid}",
+                         uid=req.uid, slot=slot, prompt_len=S)
         # token i (1-based) is written to the cache at position S + i - 1,
         # so generating N tokens needs S + N - 1 <= max_seq_len
         max_new = min(req.max_new_tokens, self.max_seq_len - S + 1)
@@ -481,6 +516,8 @@ class ServeEngine:
     def _finish(self, slot: int) -> None:
         st = self._slots[slot]
         reason = "stop" if st.tokens[-1] in st.req.stop_tokens else "length"
+        obs.event("finish", f"req:{st.req.uid}", uid=st.req.uid,
+                  reason=reason, tokens=len(st.tokens))
         self._outputs.append(RequestOutput(
             uid=st.req.uid,
             prompt_len=int(st.req.prompt.size),
@@ -514,6 +551,8 @@ class ServeEngine:
         self._tok[slot] = 0
         self.queue.push_front(st.req)
         self.stats["preemptions"] += 1
+        obs.event("preempt", f"req:{st.req.uid}", uid=st.req.uid, slot=slot,
+                  tokens_discarded=len(st.tokens))
 
     def _ensure_decode_pages(self, active, n_steps: int):
         """Before a paged decode of ``n_steps``, make every active slot's
@@ -550,15 +589,21 @@ class ServeEngine:
         return sorted(ok)
 
     # -- sparsity tiers ----------------------------------------------------
-    def set_tier(self, idx: int) -> None:
+    def set_tier(self, idx: int, reason: Optional[str] = None) -> None:
         """Serve from tier ``idx``'s resident weight copy.  A pure pytree
         pointer swap: the jitted decode programs key their executables on
         param structure, so after :meth:`warm_tiers` this never
-        recompiles (``trace_events()`` stays flat across switches)."""
+        recompiles (``trace_events()`` stays flat across switches).
+        ``reason`` annotates the timeline event (the engine forwards the
+        controller's last escalation reason)."""
         if self.tiers is None:
             raise ValueError("engine was built without tiers")
         if idx == self.tier_idx:
             return
+        obs.event("tier_switch", "controller",
+                  tier_from=self.tiers[self.tier_idx].spec.name,
+                  tier_to=self.tiers[idx].spec.name,
+                  reason=reason or "manual")
         self.params = self.tiers[idx].params
         self.tier_idx = idx
         self.stats["tier_switches"] += 1
@@ -607,8 +652,12 @@ class ServeEngine:
                 return
             except InjectedFaultError:
                 if attempt >= f.cfg.max_retries:
+                    obs.event("fault_retries_exhausted", "faults",
+                              step=step_idx, attempts=attempt)
                     raise
                 self.stats["fault_retries"] += 1
+                obs.event("fault_retry", "faults", step=step_idx,
+                          attempt=attempt)
                 f.sleep(min(f.cfg.backoff_s * (2 ** attempt),
                             f.cfg.backoff_cap_s))
                 attempt += 1
@@ -639,7 +688,8 @@ class ServeEngine:
         if ctrl is not None:
             ctrl.begin_step(now, len(self.queue))
             if self.tiers is not None:
-                self.set_tier(ctrl.tier_index)
+                self.set_tier(ctrl.tier_index,
+                              reason=f"slo:{ctrl.last_reason}")
             if ctrl.should_shed(len(self.queue)):
                 for req in self.queue.shed(ctrl.shed_keep()):
                     self._finish_unserved(req, now, "shed")
@@ -717,6 +767,14 @@ class ServeEngine:
         t = self._now()
         if self._controller is not None:
             self._controller.observe_decode(t - t0, 1)
+        if obs.enabled():
+            obs.complete("decode_call", self._abs(t0), self._abs(t),
+                         "engine", call=step_idx, steps=1,
+                         n_active=len(active), tier=self.tier_idx)
+            for slot in active:
+                obs.complete("decode_step", self._abs(t0), self._abs(t),
+                             f"req:{self._slots[slot].req.uid}",
+                             call=step_idx, tier=self.tier_idx)
         for slot in active:
             st = self._slots[slot]
             nxt = sample_token(logits_np[slot], st.req.sampling, st.rng)
@@ -787,6 +845,14 @@ class ServeEngine:
         t1 = self._now()
         if self._controller is not None:
             self._controller.observe_decode(t1 - t0, T)
+        if obs.enabled():
+            obs.complete("decode_call", self._abs(t0), self._abs(t1),
+                         "engine", call=step_idx, steps=T,
+                         n_active=len(active), tier=self.tier_idx)
+            for slot in active:
+                obs.complete("decode_chunk", self._abs(t0), self._abs(t1),
+                             f"req:{self._slots[slot].req.uid}",
+                             call=step_idx, steps=T, tier=self.tier_idx)
         for slot in active:
             st = self._slots[slot]
             for t in range(T):

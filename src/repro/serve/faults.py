@@ -41,6 +41,8 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
+from repro.obs import trace as obs
+from repro.obs.registry import REGISTRY, MirroredCounters
 from repro.serve.errors import InjectedFaultError
 
 __all__ = ["FaultConfig", "FaultInjector", "InjectedFaultError",
@@ -105,10 +107,13 @@ class FaultInjector:
         self._err_step: Optional[int] = None
         self._errs_left = 0
         self._spiked_step: Optional[int] = None
-        #: what actually fired, for reports/tests
-        self.injected = {"spikes": 0, "spike_s": 0.0, "errors": 0,
-                         "slow_steps": 0, "slow_s": 0.0,
-                         "admission_delays": 0}
+        #: what actually fired, for reports/tests — a plain dict to read,
+        #: mirrored into the telemetry registry (and, with the flight
+        #: recorder on, each injection below lands on the "faults" track)
+        self.injected = MirroredCounters(
+            {"spikes": 0, "spike_s": 0.0, "errors": 0,
+             "slow_steps": 0, "slow_s": 0.0, "admission_delays": 0},
+            REGISTRY.family("faults", help="injected faults, by kind"))
 
     # -- schedule introspection (deterministic, pure) ---------------------
     def spike_at(self, step: int) -> float:
@@ -135,6 +140,8 @@ class FaultInjector:
         if self._errs_left > 0:
             self._errs_left -= 1
             self.injected["errors"] += 1
+            obs.event("injected_error", "faults", step=step,
+                      remaining=self._errs_left)
             raise InjectedFaultError(f"injected transient fault at decode "
                                      f"step {step}")
         if self._spiked_step != step:
@@ -143,6 +150,8 @@ class FaultInjector:
             if s > 0:
                 self.injected["spikes"] += 1
                 self.injected["spike_s"] += s
+                obs.event("latency_spike", "faults", step=step,
+                          seconds=round(s, 6))
                 self.sleep(s)
 
     def post_decode(self, step: int, measured_s: float) -> None:
@@ -153,11 +162,15 @@ class FaultInjector:
             extra = (factor - 1.0) * measured_s
             self.injected["slow_steps"] += 1
             self.injected["slow_s"] += extra
+            obs.event("slow_window", "faults", step=step, factor=factor,
+                      extra_s=round(extra, 6))
             self.sleep(extra)
 
     def admission_delay(self) -> None:
         if self.cfg.admission_delay_s > 0:
             self.injected["admission_delays"] += 1
+            obs.event("admission_delay", "faults",
+                      seconds=self.cfg.admission_delay_s)
             self.sleep(self.cfg.admission_delay_s)
 
 

@@ -20,22 +20,10 @@ import dataclasses
 import math
 from typing import Iterable, Optional
 
-import numpy as np
-
 from repro.ioutil import atomic_write_json
+from repro.statutil import fmt as _fmt, pct as _pct  # shared nan-safe helpers
 
 __all__ = ["ServeMetrics", "summarize"]
-
-
-def _pct(xs, q) -> float:
-    return float(np.percentile(np.asarray(xs, np.float64), q)) if len(xs) \
-        else float("nan")
-
-
-def _fmt(x: float, scale: float = 1.0, digits: int = 1) -> str:
-    """Render a metric for the text report; nan (an all-rejected/shed run
-    has no latency stats) prints as ``--`` instead of ``nan``."""
-    return "--" if math.isnan(x) else f"{x * scale:.{digits}f}"
 
 
 @dataclasses.dataclass
@@ -80,7 +68,7 @@ class ServeMetrics:
             f"{_fmt(self.ttft_p99, ms)} ms | "
             f"per-token p50/p99 {_fmt(self.tok_latency_p50, ms, 2)}/"
             f"{_fmt(self.tok_latency_p99, ms, 2)} ms | "
-            f"{self.throughput_tok_s:.1f} tok/s",
+            f"{_fmt(self.throughput_tok_s)} tok/s",
             f"[{self.label}] outcomes: rejected {self.num_rejected}, "
             f"shed {self.num_shed}, timeout {self.num_timeout}, "
             f"deadline-miss {self.num_deadline_miss} | "
@@ -155,7 +143,10 @@ def summarize(outputs: Iterable, wall_time: float, *,
         tok_latency_p50=_pct(gaps, 50),
         tok_latency_p99=_pct(gaps, 99),
         request_latency_p50=_pct(req_lat, 50),
-        throughput_tok_s=n_tok / max(wall_time, 1e-9),
+        # a zero/near-zero wall (no work actually ran) has no meaningful
+        # rate — nan here, rendered "--" by report(), like nan-safe ttft
+        throughput_tok_s=(n_tok / wall_time if wall_time > 1e-9
+                          else float("nan")),
         num_shed=n_by_reason["shed"],
         num_timeout=n_by_reason["timeout"],
         num_deadline_miss=n_miss,

@@ -48,6 +48,8 @@ from typing import Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.obs import trace as obs
+from repro.obs.registry import REGISTRY, MirroredCounters
 from repro.tune import routing
 from repro.tune.table import bucket
 
@@ -329,8 +331,13 @@ class SLOController:
         self.level = 0
         self._hot = 0
         self._cool = 0
-        self.counters = {"escalations": 0, "deescalations": 0,
-                         "hot_steps": 0, "watchdog_trips": 0}
+        #: why the controller last moved the ladder — the engine forwards
+        #: this as the tier-switch reason attribute on the timeline
+        self.last_reason = "steady"
+        self.counters = MirroredCounters(
+            {"escalations": 0, "deescalations": 0,
+             "hot_steps": 0, "watchdog_trips": 0},
+            REGISTRY.family("slo", help="SLO controller decisions"))
 
     # -- thresholds --------------------------------------------------------
     def shed_keep(self) -> int:
@@ -368,6 +375,8 @@ class SLOController:
         wd = self.watchdog.slow()
         if wd:
             self.counters["watchdog_trips"] += 1
+            obs.event("watchdog_trip", "controller", level=self.level,
+                      queue_depth=queue_depth)
         hot = (wd or queue_depth > self.queue_high()
                or (tpot == tpot and tpot > self.cfg.escalate_frac * slo_s))
         cool = ((tpot != tpot or tpot < self.cfg.deescalate_frac * slo_s)
@@ -381,6 +390,17 @@ class SLOController:
                     self.level += 1
                     self._hot = 0
                     self.counters["escalations"] += 1
+                    # which hot signal drove the move, most-specific first
+                    self.last_reason = (
+                        "watchdog" if wd
+                        else "queue_depth" if queue_depth > self.queue_high()
+                        else "tpot")
+                    obs.event("escalate", "controller",
+                              level_from=self.level - 1, level_to=self.level,
+                              reason=self.last_reason,
+                              queue_depth=queue_depth,
+                              tpot_ms=(round(tpot * 1e3, 3)
+                                       if tpot == tpot else None))
         elif cool:
             self._cool += 1
             self._hot = 0
@@ -388,6 +408,10 @@ class SLOController:
                 self.level -= 1
                 self._cool = 0
                 self.counters["deescalations"] += 1
+                self.last_reason = "recovered"
+                obs.event("deescalate", "controller",
+                          level_from=self.level + 1, level_to=self.level,
+                          reason="recovered", queue_depth=queue_depth)
         else:
             self._hot = 0
             self._cool = 0

@@ -9,6 +9,15 @@ the SLO control loop's tier switches are recompile-free after
 already-compiled program, so serving across tier switches must not move
 these counters at all.
 
+The store is now a ``repro.obs`` registry family: ``note_trace`` /
+``trace_events`` / ``reset_trace_events`` remain as thin shims over it so
+every existing call site and test keeps working, but the counts land in
+``TelemetryRegistry.snapshot()`` alongside the dispatch/kernel counters,
+and — when the flight recorder is on — each JIT trace shows up as a
+timestamped ``jit_trace`` event on the engine track (a recompile during
+steady-state serving is exactly the kind of thing you want visible on
+the timeline).
+
 A dedicated leaf module (rather than a counter on ``serve/engine.py``)
 because both ``serve/cache.py`` (slot prefill) and ``serve/engine.py``
 (decode/chunk programs) record events, and cache must not import engine.
@@ -16,11 +25,15 @@ because both ``serve/cache.py`` (slot prefill) and ``serve/engine.py``
 
 from __future__ import annotations
 
-import collections
+from repro.obs.registry import REGISTRY
 
 __all__ = ["note_trace", "trace_events", "reset_trace_events"]
 
-_TRACE_EVENTS: collections.Counter = collections.Counter()
+_TRACE_EVENTS = REGISTRY.family(
+    "serve_jit_traces",
+    help="JAX traces of serve programs, by program name "
+         "(trace-time only; flat counts prove recompile-free serving)",
+    trace_as="jit_trace", track="engine")
 
 
 def note_trace(name: str) -> None:

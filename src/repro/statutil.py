@@ -1,0 +1,32 @@
+"""Shared nan-safe statistics/formatting helpers.
+
+One home for the percentile and metric-rendering helpers used by the
+serving metrics (``repro.serve.metrics``), the benchmark harness
+(``benchmarks/common.py``), and the observability exporters — previously
+copied per-module with subtly different edge-case behavior.
+
+Conventions: an empty sample is ``nan``, never an exception; ``nan``
+renders as ``--`` (a run with no data is a legitimate outcome, e.g. an
+all-shed overload run, and the report must stay printable).
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+__all__ = ["pct", "fmt"]
+
+
+def pct(xs, q: float) -> float:
+    """Percentile ``q`` of ``xs`` as a float; ``nan`` for an empty sample
+    (never raises on ``[]``, generators, or 0-size arrays)."""
+    a = np.asarray(list(xs) if not hasattr(xs, "__len__") else xs,
+                   np.float64)
+    return float(np.percentile(a, q)) if a.size else float("nan")
+
+
+def fmt(x: float, scale: float = 1.0, digits: int = 1) -> str:
+    """Render a metric for a text report; ``nan`` prints as ``--``."""
+    return "--" if math.isnan(x) else f"{x * scale:.{digits}f}"

@@ -18,17 +18,25 @@ _disp = importlib.import_module("repro.core.dispatch")
 _kops = importlib.import_module("repro.kernels.ops")
 _routing = importlib.import_module("repro.tune.routing")
 _conv = importlib.import_module("repro.core.convert")
+_obs_trace = importlib.import_module("repro.obs.trace")
+_obs_registry = importlib.import_module("repro.obs.registry")
 
 
 @pytest.fixture(autouse=True)
 def _reset_routing_state():
     """Counter/table hygiene: every test starts with empty dispatch and
-    kernel counters, an empty conversion log, and no active tuning table,
-    so a test asserting exact counts (or default routing) can never be
+    kernel counters, an empty conversion log, no active tuning table, an
+    empty telemetry registry, and the flight recorder off and empty, so a
+    test asserting exact counts (or default routing) can never be
     poisoned by whatever traced before it — see
-    tests/test_counter_hygiene.py for the regression pinning this."""
+    tests/test_counter_hygiene.py for the regressions pinning this.
+    ``REGISTRY.reset()`` clears metric objects *in place*, so
+    module-held references (dispatch/kernel counter families, engine
+    stats mirrors) stay live across the reset."""
     _disp.reset_dispatch_counters()
     _kops.reset_kernel_counters()
     _routing.clear_active_table()
     _conv.reset_conversion_log()
+    _obs_registry.REGISTRY.reset()
+    _obs_trace.reset()
     yield

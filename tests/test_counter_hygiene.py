@@ -1,12 +1,13 @@
 """Counter hygiene: the autouse conftest fixture must isolate the
-trace-time telemetry (``dispatch_counters`` / ``kernel_counters``) and the
-active tuning table between tests.
+trace-time telemetry (``dispatch_counters`` / ``kernel_counters``), the
+active tuning table, the unified telemetry registry, and the flight
+recorder between tests.
 
-The two ``test_counter_bleed_*`` twins are the regression proper: each
-performs one counted operation and asserts the *exact total* count.  If the
-fixture ever stops resetting, whichever twin runs second sees the first
-twin's counts and fails — i.e. two counter-asserting tests cannot bleed
-into each other in either execution order.
+The ``test_*_bleed_*`` twins are the regression proper: each performs one
+counted operation and asserts the *exact total* count.  If the fixture
+ever stops resetting, whichever twin runs second sees the first twin's
+counts and fails — i.e. two counter-asserting tests cannot bleed into
+each other in either execution order.
 """
 
 import importlib
@@ -17,6 +18,8 @@ import numpy as np
 
 from repro.core import nmg
 from repro.kernels import ops as kops
+from repro.obs import trace as obs
+from repro.obs.registry import REGISTRY
 from repro.tune import TuningTable, routing
 
 disp = importlib.import_module("repro.core.dispatch")
@@ -78,6 +81,49 @@ def test_fixture_clears_active_tuning_table_second():
     assert routing.active_table() is None
     # and the dispatcher's cost-model hook was unwired with it
     assert disp.conversion_cost_model() is None
+
+
+def test_registry_bleed_first_twin():
+    """One inc on a registry counter => exactly 1.  The fixture's
+    ``REGISTRY.reset()`` is what keeps the twins order-independent."""
+    REGISTRY.counter("hygiene_probe", help="twin-test probe").inc()
+    assert REGISTRY.snapshot()["hygiene_probe"] == 1
+
+
+def test_registry_bleed_second_twin():
+    REGISTRY.counter("hygiene_probe", help="twin-test probe").inc()
+    assert REGISTRY.snapshot()["hygiene_probe"] == 1
+
+
+def test_registry_reset_keeps_module_references_live():
+    """``REGISTRY.reset()`` zeroes in place: the family objects dispatch
+    and ops hold at module level must stay the registered instances, so
+    post-reset increments land in the registry snapshot."""
+    _one_routed_matmul()
+    _one_sparse_dispatch()
+    snap = REGISTRY.snapshot()
+    assert sum(snap["kernel_routes"].values()) >= 1, snap
+    assert sum(snap["dispatch"].values()) >= 1, snap
+    REGISTRY.reset()
+    assert REGISTRY.snapshot()["kernel_routes"] == {}
+    mod = importlib.import_module("repro.kernels.ops")
+    assert mod._KERNEL_COUNTS is REGISTRY.family("kernel_routes")
+
+
+def test_recorder_bleed_first_twin():
+    """The recorder starts disabled and empty; one recorded event is
+    exactly one record (the fixture's ``obs.reset()`` pins both)."""
+    assert not obs.enabled() and obs.records() == []
+    obs.enable()
+    obs.event("hygiene_probe", "engine")
+    assert len(obs.records()) == 1
+
+
+def test_recorder_bleed_second_twin():
+    assert not obs.enabled() and obs.records() == []
+    obs.enable()
+    obs.event("hygiene_probe", "engine")
+    assert len(obs.records()) == 1
 
 
 def test_reset_helpers_clear_everything():
